@@ -1,0 +1,41 @@
+"""Paper Table 4 — topology affinity hit rate over cycles × scale-ups.
+
+Paper: Gödel standard 44.5%, Gödel+FlexTopo 100% (=> "55% improvement").
+Full protocol (BENCH_FULL=1): 100 cycles × 50 scale-ups on 100 nodes.
+Default: 20 × 25 on 50 nodes (same statistics, CPU-friendly).
+"""
+from __future__ import annotations
+
+from repro.core.simulator import SimConfig, run_hit_rate_experiment
+
+from .common import FULL, emit, p
+
+
+def run(full: bool = FULL) -> list[dict]:
+    if full:
+        cfg = SimConfig(num_nodes=100, seed=0)
+        cycles, ups = 100, 50
+    else:
+        cfg = SimConfig(num_nodes=50, seed=0)
+        cycles, ups = 20, 25
+    rows = []
+    for engine in ("godel", "imp"):
+        rep = run_hit_rate_experiment(cfg, engine, cycles=cycles,
+                                      scaleups_per_cycle=ups)
+        rows.append({
+            "engine": engine, "preemptions": rep.preemptions,
+            "hits": rep.hits, "hit_rate": rep.hit_rate,
+            "failures": rep.failures,
+            "p50_us": p(rep.sourcing_us, 50), "p90_us": p(rep.sourcing_us, 90),
+        })
+        emit(f"table4_hit_rate_{engine}", p(rep.sourcing_us, 50),
+             f"hit_rate={rep.hit_rate:.3f} n={rep.preemptions}")
+    godel, imp = rows
+    emit("table4_improvement", 0.0,
+         f"delta_hit_rate={imp['hit_rate'] - godel['hit_rate']:.3f} "
+         f"(paper: 0.555)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

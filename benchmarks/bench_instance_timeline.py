@@ -1,0 +1,25 @@
+"""Paper Fig 9 — instance counts during preemption (2 auto-scaling events)."""
+from __future__ import annotations
+
+from repro.core.simulator import SimConfig, run_timeline
+
+from .common import FULL, emit
+
+
+def run(full: bool = FULL) -> list[dict]:
+    cfg = SimConfig(num_nodes=100 if full else 50, seed=4)
+    scale = cfg.num_nodes / 100.0
+    events = [("B", max(2, round(10 * scale))), ("A", max(1, round(5 * scale)))]
+    tl = run_timeline(cfg, engine="imp", events=events)
+    first, last = tl[0], tl[-1]
+    for name in ("A", "B", "C", "D"):
+        emit(f"fig9_{name}", 0.0,
+             f"start={first.get(name, 0)} end={last.get(name, 0)}")
+    emit("fig9_offline_shrinks", 0.0,
+         f"{last.get('C', 0) + last.get('D', 0)} < "
+         f"{first.get('C', 0) + first.get('D', 0)}")
+    return tl
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""§Roofline — assemble the full (arch × shape) baseline table from the
+dry-run artifacts and emit the markdown table EXPERIMENTS.md embeds."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+
+from . import roofline as rl
+from .common import emit
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def run(full: bool = False) -> list[dict]:
+    rows = []
+    skipped = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            ok, why = shape_applicable(cfg, shape)
+            if not ok:
+                skipped.append((arch, shape_name, why))
+                continue
+            row = rl.roofline_row(arch, shape_name)
+            if row is None:
+                emit(f"roofline_{arch}_{shape_name}", 0.0, "MISSING dry-run")
+                continue
+            rows.append(row.as_dict())
+            emit(f"roofline_{arch}_{shape_name}",
+                 max(row.compute_s, row.memory_s, row.collective_s) * 1e6,
+                 f"dominant={row.dominant} useful={row.useful_ratio:.2f}")
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "roofline.json"), "w") as f:
+        json.dump({"rows": rows, "skipped": skipped}, f, indent=1)
+    with open(os.path.join(OUT_DIR, "roofline.md"), "w") as f:
+        f.write(markdown_table(rows, skipped))
+    return rows
+
+
+def markdown_table(rows: list[dict], skipped) -> str:
+    lines = [
+        "| arch | shape | kind | compute (s) | memory (s) | collective (s) "
+        "| dominant | MODEL_FLOPS | HLO_FLOPs (global) | useful ratio |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | **{r['dominant']}** "
+            f"| {r['model_flops']:.2e} | {r['hlo_flops_global']:.2e} "
+            f"| {r['useful_ratio']:.2f} |")
+    if skipped:
+        lines.append("")
+        lines.append("Skipped cells (documented in DESIGN.md §5):")
+        for arch, shape, why in skipped:
+            lines.append(f"- `{arch} × {shape}` — {why}")
+    return "\n".join(lines) + "\n"
+
+
+if __name__ == "__main__":
+    run()

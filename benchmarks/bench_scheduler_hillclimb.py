@@ -1,0 +1,94 @@
+"""§Perf hillclimb (paper-representative cell): candidate-sourcing latency.
+
+The paper's own bottleneck metric (Table 5).  Wall-clock measured on this
+host, 100-node saturated cluster, preemptor B (high-p-1000-4-card),
+independent preemptions.  Iterations:
+
+  it0  paper-faithful python IMP, naive O(instances) cluster scans
+  it1  + per-node instance index & free-mask cache (host-side data structure)
+  it2  per-node vectorized subset evaluation (imp_jax)  [hypothesis: slower —
+       per-node dispatch overhead dominates at m<=8]
+  it3  cluster-batched sweep: ONE vmapped evaluation per subset size over all
+       candidate nodes (imp_batched)
+
+Each records P50/P90 sourcing latency + end-to-end preempt() latency.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.scheduler import TopoScheduler
+from repro.core.simulator import SimConfig, build_saturated_cluster
+from repro.core.workload import table3_workloads
+
+from .common import FULL, emit
+
+
+def _measure(engine: str, node_index: bool, nodes: int = 100,
+             samples: int = 30, preemptor: str = "B") -> dict:
+    import repro.core.simulator as sim
+    from repro.core.cluster import Cluster
+
+    cfg = SimConfig(num_nodes=nodes, seed=11)
+    wls = {w.name: w for w in table3_workloads()}
+    cluster = Cluster(cfg.spec, cfg.num_nodes, node_index=node_index)
+    import random
+
+    sim.saturate(cluster, table3_workloads(),
+                 {k: round(v * nodes / 100) for k, v in
+                  sim.TABLE3_INITIAL_INSTANCES.items()},
+                 random.Random(cfg.seed))
+    sched = TopoScheduler(cluster, engine=engine)
+    sourcing, total = [], []
+    # warm up jit caches so compile time isn't counted as scheduling latency
+    res = sched.schedule_or_preempt(wls[preemptor])
+    if res is not None:
+        sched.undo(res)
+        if hasattr(res, "sourcing_us"):
+            sched.sourcing_us_log.clear()
+    for _ in range(samples):
+        t0 = time.perf_counter()
+        res = sched.schedule_or_preempt(wls[preemptor])
+        total.append((time.perf_counter() - t0) * 1e6)
+        if res is None:
+            break
+        if hasattr(res, "sourcing_us"):
+            sourcing.append(res.sourcing_us)
+        sched.undo(res)
+    return {
+        "engine": engine, "node_index": node_index,
+        "sourcing_p50": float(np.percentile(sourcing, 50)) if sourcing else 0,
+        "sourcing_p90": float(np.percentile(sourcing, 90)) if sourcing else 0,
+        "total_p50": float(np.percentile(total, 50)),
+        "total_p90": float(np.percentile(total, 90)),
+        "n": len(sourcing),
+    }
+
+
+ITERATIONS = [
+    ("it0_python_imp_naive", "imp", False),
+    ("it1_python_imp_indexed", "imp", True),
+    ("it2_pernode_vectorized", "imp_jax", True),
+    ("it3_cluster_batched", "imp_batched", True),
+]
+
+
+def run(full: bool = FULL) -> list[dict]:
+    nodes = 100
+    samples = 50 if full else 25
+    rows = []
+    for name, engine, idx in ITERATIONS:
+        r = _measure(engine, idx, nodes=nodes, samples=samples)
+        r["iteration"] = name
+        rows.append(r)
+        emit(f"perf_sched_{name}", r["sourcing_p50"],
+             f"sourcing_p90={r['sourcing_p90']:.0f}us "
+             f"total_p50={r['total_p50']:.0f}us "
+             f"total_p90={r['total_p90']:.0f}us n={r['n']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,137 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""§Perf hillclimb variants for dry-run cells: re-lower + compile with a
+config override, recompute roofline terms, record before/after.
+
+Run directly (it manages its own 512 placeholder devices):
+  PYTHONPATH=src python -m benchmarks.perf_variants
+"""
+import dataclasses
+import gzip
+import json
+import sys
+import time
+
+from repro.configs import SHAPES, get_config
+from repro.launch import hlo as hlo_util
+from repro.launch.dryrun import _memory_dict, lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import MoEConfig
+
+from . import roofline as rl
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "perf")
+
+
+def run_variant(arch: str, shape_name: str, variant: str, overrides: dict,
+                force: bool = False) -> dict:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{arch}__{shape_name}__{variant}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    mesh = make_production_mesh(multi_pod=False)
+    t0 = time.time()
+    lowered = lower_cell(arch, shape_name, mesh, overrides=overrides)
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    txt = compiled.as_text()
+    stats = hlo_util.walk_stats(txt)
+    cfg = dataclasses.replace(get_config(arch), **overrides)
+    shape = SHAPES[shape_name]
+    mem_dev = rl.hbm_bytes(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "overrides": {k: str(v) for k, v in overrides.items()},
+        "compile_s": round(compile_s, 1),
+        "memory": _memory_dict(compiled.memory_analysis()),
+        "flops_dev": stats["flops_scaled"],
+        "collective_bytes_dev": stats["collective_bytes_scaled"],
+        "terms": {
+            "compute_s": stats["flops_scaled"] / rl.PEAK_FLOPS,
+            "memory_s": mem_dev / rl.HBM_BW,
+            "collective_s": stats["collective_bytes_scaled"] / rl.LINK_BW,
+        },
+    }
+    with gzip.open(os.path.join(
+            OUT_DIR, f"{arch}__{shape_name}__{variant}.txt.gz"), "wt") as f:
+        f.write(txt)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+VARIANTS = [
+    # (arch, shape, variant, overrides)
+    # H1: qwen2 28 heads don't divide TP16 -> attention replicated 16x.
+    #     Pad to 32 heads: +14% attention FLOPs but 16-way sharded.
+    ("qwen2-7b", "train_4k", "pad_heads_32", {"n_heads": 32}),
+    # H2: mixtral MoE global dispatch argsorts/gathers across data shards.
+    #     Per-sequence dispatch keeps sort + capacity buffers data-local.
+    ("mixtral-8x7b", "train_4k", "per_seq_dispatch",
+     {"moe": MoEConfig(num_experts=8, top_k=2, dispatch="per_sequence")}),
+    # H2b: combine with remat policy 'dots' (save matmul outputs: less
+    #      recompute, more memory) — secondary lever on the compute term.
+    ("mixtral-8x7b", "train_4k", "per_seq_dispatch_dots",
+     {"moe": MoEConfig(num_experts=8, top_k=2, dispatch="per_sequence"),
+      "remat": "dots"}),
+    # H1b: qwen2 pad + per-shape check on prefill (same uneven-head waste)
+    ("qwen2-7b", "prefill_32k", "pad_heads_32", {"n_heads": 32}),
+    # --- round 2 (targets chosen from round-1 results) ---
+    # H1c: after padding, qwen2 train becomes collective-bound (wo psums) ->
+    #      sequence parallelism: bf16 AG/RS instead of f32 all-reduce
+    ("qwen2-7b", "train_4k", "pad32_sp", {"n_heads": 32, "seq_shard": True}),
+    # H4: prefill cells materialize S^2 scores (490GB/dev!) -> q-chunked
+    #     attention bounds live scores to [B, H, 512, S]
+    ("qwen2-7b", "prefill_32k", "pad32_chunked",
+     {"n_heads": 32, "attn_chunk_q": 512}),
+    ("paligemma-3b", "prefill_32k", "chunked", {"attn_chunk_q": 512}),
+    # H2c: mixtral — Megatron anchors on expert FFN intermediates (defer the
+    #      psum to the d-sized down-proj output)
+    ("mixtral-8x7b", "train_4k", "ffn_constrain",
+     {"moe": MoEConfig(num_experts=8, top_k=2, constrain_ffn=True)}),
+    # H2d: ZeRO-1 for expert weights — params replicated over data, only
+    #      optimizer states sharded; removes per-layer gathers + the fp32
+    #      backward activation psums (round-1 analysis)
+    ("mixtral-8x7b", "train_4k", "zero1_experts",
+     {"moe_zero1": True,
+      "moe": MoEConfig(num_experts=8, top_k=2, dispatch="per_sequence")}),
+    # H2e (BLOCKED): shard_map island — partial-manual shard_map nested in a
+    #      lax.scan trips an XLA fatal check ("Invalid binary instruction
+    #      opcode copy") at any partition count; the island is validated
+    #      standalone (tests) and documented in EXPERIMENTS.md §Perf.
+    # H2f: best surviving combination — ZeRO-1 experts + dots remat
+    ("mixtral-8x7b", "train_4k", "zero1_dots",
+     {"moe_zero1": True, "remat": "dots",
+      "moe": MoEConfig(num_experts=8, top_k=2, dispatch="per_sequence")}),
+    # H3: olmoe (true EP: 64 experts / 16-way model axis) — does per-seq
+    #     dispatch + zero1 help the EP regime too?
+    ("olmoe-1b-7b", "train_4k", "per_seq_zero1",
+     {"moe_zero1": True,
+      "moe": MoEConfig(num_experts=64, top_k=8, dispatch="per_sequence")}),
+    # H5: dense ZeRO-1 — qwen3 train is collective-bound (6.6 s) largely on
+    #     per-layer FSDP weight gathers; replicate bf16 params over data
+    #     (8B/16-way TP = 1 GB/dev params; opt states stay fully sharded)
+    ("qwen3-8b", "train_4k", "zero1_dense", {"zero1": True}),
+    ("qwen3-8b", "train_4k", "zero1_sp", {"zero1": True, "seq_shard": True}),
+]
+
+
+def main() -> None:
+    force = "--force" in sys.argv
+    for arch, shape, variant, overrides in VARIANTS:
+        base = rl.roofline_row(arch, shape)
+        rec = run_variant(arch, shape, variant, overrides, force=force)
+        t = rec["terms"]
+        print(f"{arch} {shape} [{variant}] compile={rec['compile_s']}s")
+        if base:
+            print(f"  before: compute={base.compute_s:.2f}s "
+                  f"memory={base.memory_s:.2f}s "
+                  f"collective={base.collective_s:.2f}s  dominant={base.dominant}")
+        print(f"  after:  compute={t['compute_s']:.2f}s "
+              f"memory={t['memory_s']:.2f}s "
+              f"collective={t['collective_s']:.2f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,254 @@
+"""Roofline term assembly for every dry-run cell (EXPERIMENTS.md §Roofline).
+
+Terms per (arch × shape) on the single-pod mesh (256 chips):
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs          [s]
+  memory term     = HBM_bytes_per_device / HBM_bw              [s]
+  collective term = collective_bytes_per_device / link_bw      [s]
+
+Sources:
+  * FLOPs + collective bytes: the loop-trip-scaled HLO walk
+    (repro.launch.hlo.walk_stats) over the compiled module saved by the
+    dry-run — NOT raw cost_analysis, which counts scan bodies once
+    (verified; see §Roofline methodology).  The SPMD module is per-device,
+    so these are per-device quantities already.
+  * HBM bytes: analytic traffic model (weights / optimizer / activations /
+    attention scores / KV caches), mirroring the sharding rules' divisibility
+    decisions — documented per-kind below.
+  * MODEL_FLOPS = 6·N·D (train, dense) or 6·N_active·D (MoE); prefill uses
+    2·N·D, decode 2·N·B per step.  The ratio MODEL_FLOPS / HLO_FLOPs_global
+    surfaces remat/redundancy waste.
+
+Hardware constants (TPU v5e-class, per assignment): 197 TFLOP/s bf16,
+819 GB/s HBM, 50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import gzip
+import json
+import os
+
+import jax
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "dryrun")
+
+
+# ---------------------------------------------------------------------------------
+# parameter counting
+# ---------------------------------------------------------------------------------
+
+def param_counts(cfg) -> tuple[int, int]:
+    """(total params N, active params N_active)."""
+    from repro.models import build_model
+
+    api = build_model(cfg)
+    shapes = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    total = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if cfg.moe and name in ("w_gate", "w_up", "w_down") and \
+                len(leaf.shape) == 4:
+            expert += n
+    active = total
+    if cfg.moe and expert:
+        active = total - expert + expert * cfg.moe.top_k / cfg.moe.num_experts
+    return total, int(active)
+
+
+# ---------------------------------------------------------------------------------
+# analytic HBM traffic model (per device)
+# ---------------------------------------------------------------------------------
+
+def _shards(n: int, axis: int) -> int:
+    return axis if n % axis == 0 else 1
+
+
+def hbm_bytes(cfg, shape, chips=(16, 16), accum: int = 4) -> float:
+    """Per-device HBM bytes for one step of this cell (documented model)."""
+    data_sh, model_sh = chips
+    n_chips = data_sh * model_sh
+    N, _ = param_counts(cfg)
+    p_dev = N / n_chips                      # fully sharded (fsdp x tp) share
+    B = shape.global_batch
+    S = shape.seq_len
+    b_loc = max(B // data_sh, 1)
+    d = cfg.d_model
+    L = cfg.n_layers + (cfg.dec_layers if cfg.is_encdec else 0)
+    h_loc = max(cfg.n_heads // _shards(cfg.n_heads, model_sh), 1) \
+        if cfg.n_heads % model_sh == 0 else cfg.n_heads  # replicated heads
+
+    if shape.kind == "train":
+        # optimizer: read+write p, m, v in fp32
+        opt = 24.0 * p_dev
+        # weights stream once per microbatch, fwd + bwd(x2) in bf16
+        weights = 3.0 * accum * p_dev * 2
+        # residual/activation traffic: ~6 passes over the token stream/layer
+        act = 6.0 * L * b_loc * S * d * 2
+        # materialized attention scores (XLA path, fp32, fwd+bwd+remat)
+        scores = 0.0
+        if cfg.attn_pattern == "all":
+            scores = 3.0 * L * (b_loc / accum) * h_loc * _attn_area(cfg, S) \
+                * 4 * accum
+        elif cfg.attn_pattern == "griffin_1_2":
+            scores = 3.0 * (L // 3) * (b_loc / accum) * h_loc \
+                * _attn_area(cfg, S) * 4 * accum
+        return opt + weights + act + scores
+
+    if shape.kind == "prefill":
+        weights = p_dev * 2
+        act = 4.0 * L * b_loc * S * d * 2
+        scores = 0.0
+        if cfg.attn_pattern == "all":
+            scores = 1.0 * L * b_loc * h_loc * _attn_area(cfg, S) * 4
+        elif cfg.attn_pattern == "griffin_1_2":
+            scores = 1.0 * (L // 3) * b_loc * h_loc * _attn_area(cfg, S) * 4
+        return weights + act + scores
+
+    # decode: weights once + cache read/write per token
+    weights = p_dev * 2
+    cache = _cache_bytes_per_device(cfg, shape, chips)
+    return weights + 2.0 * cache / max(1, 1)  # read k+v (+small write)
+
+
+def _attn_area(cfg, S: int) -> float:
+    """Scores 'area' per head: S^2/2 causal, bounded by window when set."""
+    w = cfg.swa_window or cfg.local_window
+    if w and w < S:
+        return S * w
+    return S * S / 2
+
+
+def _cache_bytes_per_device(cfg, shape, chips) -> float:
+    from repro.configs.shapes import cache_capacity
+
+    data_sh, model_sh = chips
+    B = shape.global_batch
+    S = shape.seq_len
+    b_loc = max(B // data_sh, 1) if B % data_sh == 0 else B
+    if cfg.attn_pattern == "rwkv":
+        H = cfg.n_heads
+        h_loc = H // _shards(H, model_sh)
+        return cfg.n_layers * b_loc * h_loc * 64 * 64 * 4
+    cap = cache_capacity(cfg, S)
+    kv_loc = (cfg.n_kv // model_sh if cfg.n_kv % model_sh == 0
+              else cfg.n_kv)
+    seq_div = model_sh if (cfg.n_kv % model_sh and cap % model_sh == 0) else 1
+    if cfg.n_kv % model_sh == 0:
+        per_layer = b_loc * cap * kv_loc * cfg.hd * 2 * 2
+    else:
+        per_layer = b_loc * (cap / seq_div) * cfg.n_kv * cfg.hd * 2 * 2
+    L_attn = cfg.n_layers
+    extra = 0.0
+    if cfg.attn_pattern == "griffin_1_2":
+        L_attn = cfg.n_layers // 3
+        # rg-lru h state + conv state
+        r_loc = (cfg.rnn_width or cfg.d_model) / _shards(
+            cfg.rnn_width or cfg.d_model, model_sh)
+        extra = cfg.n_layers * b_loc * r_loc * 4 * 2
+    if cfg.is_encdec:
+        L_attn = cfg.dec_layers
+        per_layer *= 2  # self cache + cross K/V
+    return L_attn * per_layer + extra
+
+
+# ---------------------------------------------------------------------------------
+# cell assembly
+# ---------------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    kind: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_global: float
+    useful_ratio: float
+    note: str = ""
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        for k in ("compute_s", "memory_s", "collective_s"):
+            d[k] = float(f"{d[k]:.3e}")
+        d["useful_ratio"] = round(self.useful_ratio, 3)
+        return d
+
+
+def model_flops(cfg, shape) -> float:
+    N, N_active = param_counts(cfg)
+    n_eff = N_active if cfg.moe else N
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_eff * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_eff * tokens
+    return 2.0 * n_eff * shape.global_batch      # per decode step
+
+
+def load_cell(arch: str, shape_name: str, mesh: str = "single",
+              dryrun_dir: str | None = None) -> dict | None:
+    d = dryrun_dir or DRYRUN_DIR
+    path = os.path.join(d, f"{arch}__{shape_name}__{mesh}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def cell_hlo_stats(arch: str, shape_name: str, mesh: str = "single",
+                   dryrun_dir: str | None = None) -> dict | None:
+    from repro.launch import hlo as hlo_util
+
+    d = dryrun_dir or DRYRUN_DIR
+    path = os.path.join(d, "hlo", f"{arch}__{shape_name}__{mesh}.txt.gz")
+    if not os.path.exists(path):
+        return None
+    with gzip.open(path, "rt") as f:
+        return hlo_util.walk_stats(f.read())
+
+
+def roofline_row(arch: str, shape_name: str, mesh: str = "single",
+                 dryrun_dir: str | None = None) -> RooflineRow | None:
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = load_cell(arch, shape_name, mesh, dryrun_dir)
+    if rec is None or rec.get("status") != "ok":
+        return None
+    stats = cell_hlo_stats(arch, shape_name, mesh, dryrun_dir)
+    if stats is None:
+        return None
+    chips = 256 if mesh == "single" else 512
+    flops_dev = stats["flops_scaled"]
+    coll_dev = stats["collective_bytes_scaled"]
+    mem_dev = hbm_bytes(cfg, shape)
+    mf = model_flops(cfg, shape)
+    hlo_global = flops_dev * chips
+    terms = {
+        "compute": flops_dev / PEAK_FLOPS,
+        "memory": mem_dev / HBM_BW,
+        "collective": coll_dev / LINK_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    return RooflineRow(
+        arch=arch, shape=shape_name, kind=shape.kind,
+        compute_s=terms["compute"], memory_s=terms["memory"],
+        collective_s=terms["collective"], dominant=dominant,
+        model_flops=mf, hlo_flops_global=hlo_global,
+        useful_ratio=mf / hlo_global if hlo_global else 0.0,
+    )

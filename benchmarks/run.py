@@ -1,0 +1,35 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Set BENCH_FULL=1 for the
+paper-scale protocol (100 nodes, 100x50 preemptions).
+
+  table4_*  — hit rate (paper Table 4)
+  table5_*  — candidate-sourcing latency (paper Table 5 / Fig 11)
+  fig10_*   — per-workload sourcing overhead (paper Fig 10)
+  fig9_*    — preemption timeline (paper Fig 9)
+  fig8_*    — allocation snapshots (paper Fig 8)
+  roofline_* — §Roofline terms per (arch x shape) from the dry-run
+"""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from . import (bench_allocation_snapshot, bench_hit_rate,
+                   bench_instance_timeline, bench_roofline,
+                   bench_scheduler_hillclimb, bench_sourcing_latency,
+                   bench_workload_overhead)
+
+    print("name,us_per_call,derived")
+    for mod in (bench_hit_rate, bench_sourcing_latency,
+                bench_workload_overhead, bench_instance_timeline,
+                bench_allocation_snapshot, bench_scheduler_hillclimb,
+                bench_roofline):
+        t0 = time.time()
+        mod.run()
+        print(f"# {mod.__name__} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

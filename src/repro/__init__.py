@@ -1,0 +1,8 @@
+"""repro — topology-aware preemptive scheduling for co-located LLM workloads.
+
+A production-grade JAX framework reproducing and extending
+"Topology-aware Preemptive Scheduling for Co-located LLM Workloads"
+(Zhang et al., Baichuan-Inc, 2024).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,133 @@
+"""Fault-tolerant checkpointing: atomic commits, retention, elastic restore.
+
+Layout:  <dir>/step_<k>.tmp-<nonce>/  →  fsync'd  →  rename to <dir>/step_<k>/
+The rename is the commit point; a crash mid-write leaves only a .tmp dir that
+restore ignores and the next save garbage-collects.  Restore re-shards arrays
+onto whatever mesh/sharding the caller passes (elastic scaling: a checkpoint
+written on one mesh restores onto any other).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+
+import jax
+import numpy as np
+
+_SEP = "__"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        flat[_SEP.join(parts)] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(tree, directory: str, step: int, extra: dict | None = None
+                ) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = f"{final}.tmp-{os.getpid()}-{time.time_ns()}"
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    meta = {"step": step, "keys": sorted(flat), "extra": extra or {}}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)           # atomic commit
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and ".tmp" not in d]
+    return max(steps) if steps else None
+
+
+def restore_pytree(template, directory: str, step: int | None = None,
+                   shardings=None) -> tuple:
+    """Restore into the structure of `template` (shape/dtype tree).
+
+    `shardings` (optional, same structure) re-shards each leaf on load —
+    this is the elastic-restore path: the checkpoint is mesh-agnostic.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves_t, tdef = jax.tree_util.tree_flatten_with_path(template)
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(leaves_t))
+    out = []
+    for (kpath, leaf), sh in zip(leaves_t, shard_leaves):
+        parts = []
+        for p in kpath:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        key = _SEP.join(parts)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: checkpoint {arr.shape} != template "
+                             f"{leaf.shape}")
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.numpy.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out)
+    return tree, meta
+
+
+class CheckpointManager:
+    """Retention + crash-garbage collection + convenience wrappers."""
+
+    def __init__(self, directory: str, keep: int = 3) -> None:
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def save(self, tree, step: int, extra: dict | None = None) -> str:
+        self._gc_tmp()
+        path = save_pytree(tree, self.directory, step, extra)
+        self._retain()
+        return path
+
+    def restore_latest(self, template, shardings=None):
+        return restore_pytree(template, self.directory, None, shardings)
+
+    def _retain(self) -> None:
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.directory)
+            if d.startswith("step_") and ".tmp" not in d)
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def _gc_tmp(self) -> None:
+        for d in os.listdir(self.directory):
+            if ".tmp" in d:
+                shutil.rmtree(os.path.join(self.directory, d),
+                              ignore_errors=True)

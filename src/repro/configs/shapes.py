@@ -1,0 +1,81 @@
+"""Assigned input shapes and ShapeDtypeStruct input specs per (arch × shape).
+
+LM transformer shapes are seq_len × global_batch.  ``decode_*`` / ``long_*``
+lower ``serve_step`` (one new token against a KV cache of seq_len), NOT
+``train_step``.  ``long_500k`` requires sub-quadratic attention and only runs
+for SSM / hybrid / SWA-bounded archs (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cache_capacity(cfg: ModelConfig, seq_len: int) -> int:
+    """KV-cache slots needed for a context of seq_len under this arch."""
+    if cfg.swa_window is not None:
+        return min(seq_len, cfg.swa_window)
+    return seq_len
+
+
+def supports_long_context(cfg: ModelConfig) -> bool:
+    """Sub-quadratic context: SSM state, Griffin local-attn, or SWA window."""
+    return (cfg.attn_pattern in ("rwkv", "griffin_1_2")
+            or cfg.swa_window is not None)
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not supports_long_context(cfg):
+        return False, ("full-attention arch: 500k dense KV decode is "
+                       "unbounded/quadratic — skipped per assignment")
+    return True, ""
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, dtype=jnp.int32) -> dict:
+    """ShapeDtypeStructs for the *data* inputs of train/prefill steps.
+
+    For decode shapes this is the (token, pos) pair; the cache specs are
+    derived with jax.eval_shape over prefill (launch/dryrun.py).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    cd = cfg.compute_dtype
+    if cfg.is_encdec:
+        return {
+            "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), cd),
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    if cfg.frontend == "patch":
+        P = cfg.frontend_len
+        return {
+            "prefix_embeds": jax.ShapeDtypeStruct((B, P, cfg.d_model), cd),
+            "tokens": jax.ShapeDtypeStruct((B, S - P), jnp.int32),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def decode_specs(shape: ShapeSpec) -> tuple:
+    """(token, pos) specs for a decode step."""
+    return (
+        jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )

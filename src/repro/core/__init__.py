@@ -1,0 +1,20 @@
+"""Core: the paper's contribution — FlexTopo + topology-aware preemption."""
+from .cluster import Cluster, ClusterArrays
+from .flextopo import FlexTopo, FlexTopoMasks
+from .placement import (INFEASIBLE, Placement, achieved_tier, best_tier,
+                        is_topology_hit, min_tier_for, place, place_blind)
+from .scheduler import PreemptionResult, ScheduleResult, TopoScheduler
+from .scoring import Candidate, score, select_best
+from .topology import A100_SERVER, RTX4090_SERVER, SPECS, TPU_V5E_HOST, ServerSpec
+from .workload import (Instance, TopoPolicy, WorkloadSpec, table1_workloads,
+                       table3_workloads)
+
+__all__ = [
+    "Cluster", "ClusterArrays", "FlexTopo", "FlexTopoMasks", "INFEASIBLE",
+    "Placement", "achieved_tier", "best_tier", "is_topology_hit",
+    "min_tier_for", "place", "place_blind", "PreemptionResult",
+    "ScheduleResult", "TopoScheduler", "Candidate", "score", "select_best",
+    "A100_SERVER", "RTX4090_SERVER", "SPECS", "TPU_V5E_HOST", "ServerSpec",
+    "Instance", "TopoPolicy", "WorkloadSpec", "table1_workloads",
+    "table3_workloads",
+]

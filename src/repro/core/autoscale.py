@@ -1,0 +1,104 @@
+"""Diurnal-traffic auto-scaler driving preemptive scheduling (paper §1, §2.3).
+
+Online chat traffic follows a diurnal pattern; offline jobs pad the valleys.
+The autoscaler converts a traffic curve into desired replica counts for the
+online workloads, scales up via the topology-aware scheduler (preempting
+offline instances as needed), and scales down by releasing instances — which
+re-opens capacity the simulator back-fills with offline work (saturation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+
+from .cluster import Cluster
+from .scheduler import PreemptionResult, TopoScheduler
+from .workload import WorkloadSpec
+
+
+def diurnal_traffic(hour: float, peak: float = 1.0, trough: float = 0.3) -> float:
+    """Smooth day curve in [trough, peak], peaking at 14:00."""
+    phase = math.cos((hour - 14.0) / 24.0 * 2.0 * math.pi)
+    return trough + (peak - trough) * (phase + 1.0) / 2.0
+
+
+@dataclasses.dataclass
+class AutoscalePolicy:
+    workload: WorkloadSpec
+    min_replicas: int
+    max_replicas: int
+
+    def desired(self, load: float) -> int:
+        span = self.max_replicas - self.min_replicas
+        return self.min_replicas + math.ceil(span * load)
+
+
+@dataclasses.dataclass
+class AutoscaleEvent:
+    hour: float
+    workload: str
+    action: str            # scale_up | scale_down | noop
+    delta: int
+    preemptions: int
+    hits: int
+    failures: int
+
+
+class Autoscaler:
+    def __init__(self, cluster: Cluster, scheduler: TopoScheduler,
+                 policies: list[AutoscalePolicy],
+                 backfill: WorkloadSpec | None = None,
+                 seed: int = 0) -> None:
+        self.cluster = cluster
+        self.scheduler = scheduler
+        self.policies = policies
+        self.backfill = backfill
+        self.rng = random.Random(seed)
+        self.events: list[AutoscaleEvent] = []
+
+    def _replicas(self, name: str) -> list[int]:
+        return [i.uid for i in self.cluster.instances.values()
+                if i.workload.name == name]
+
+    def step(self, hour: float) -> list[AutoscaleEvent]:
+        load = diurnal_traffic(hour)
+        out = []
+        for pol in self.policies:
+            current = self._replicas(pol.workload.name)
+            want = pol.desired(load)
+            delta = want - len(current)
+            preemptions = hits = failures = 0
+            if delta > 0:
+                for _ in range(delta):
+                    res = self.scheduler.schedule_or_preempt(pol.workload)
+                    if res is None:
+                        failures += 1
+                    elif isinstance(res, PreemptionResult):
+                        preemptions += 1
+                        hits += int(res.hit)
+                action = "scale_up"
+            elif delta < 0:
+                for uid in self.rng.sample(current, -delta):
+                    self.cluster.evict(uid)
+                action = "scale_down"
+            else:
+                action = "noop"
+            ev = AutoscaleEvent(hour, pol.workload.name, action, delta,
+                                preemptions, hits, failures)
+            self.events.append(ev)
+            out.append(ev)
+        # co-location: offline work continuously pads whatever is free
+        # (valleys between online peaks — paper §1 saturation allocation)
+        if self.backfill is not None:
+            while self.scheduler.schedule(self.backfill) is not None:
+                pass
+        return out
+
+    def run_day(self, step_hours: float = 1.0) -> list[AutoscaleEvent]:
+        t = 0.0
+        out = []
+        while t < 24.0:
+            out.extend(self.step(t))
+            t += step_hours
+        return out

@@ -1,0 +1,144 @@
+"""Cluster state: N servers × FlexTopo + the instance registry.
+
+The scheduler and simulator mutate cluster state exclusively through this
+class so that the FlexTopo graphs, the bitmask arrays, and the instance
+registry can never diverge.  ``arrays()`` exports the dense engine view used
+by the vectorized/Pallas preemption engines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import numpy as np
+
+from .flextopo import FlexTopo
+from .placement import Placement
+from .topology import ServerSpec
+from .workload import Instance, WorkloadSpec
+
+
+@dataclasses.dataclass
+class ClusterArrays:
+    """Dense snapshot for the vectorized engines."""
+
+    free_gpu: np.ndarray      # int32[N] free-GPU bitmask per node
+    free_cg: np.ndarray       # int32[N] free-CoreGroup bitmask per node
+    numa_gpu_masks: np.ndarray    # int32[U]
+    numa_cg_masks: np.ndarray     # int32[U]
+    socket_of_numa: np.ndarray    # int32[U]
+
+
+class Cluster:
+    def __init__(self, spec: ServerSpec, num_nodes: int,
+                 node_index: bool = True) -> None:
+        self.spec = spec
+        self.num_nodes = num_nodes
+        self.topos = [FlexTopo(spec, node_name=f"node-{i}") for i in range(num_nodes)]
+        self.instances: dict[int, Instance] = {}
+        self._uid = itertools.count()
+        # per-node instance index + cached free masks: turns victims_on /
+        # free_masks from O(total instances) scans into O(node) lookups
+        # (§Perf scheduler hillclimb; node_index=False is the naive baseline)
+        self.node_index = node_index
+        self._by_node: list[set[int]] = [set() for _ in range(num_nodes)]
+        self._mask_cache: list[tuple[int, int] | None] = [None] * num_nodes
+
+    # ---- mutation -----------------------------------------------------------------
+    def bind(self, workload: WorkloadSpec, node: int, placement: Placement) -> Instance:
+        inst = Instance(uid=next(self._uid), workload=workload, node=node,
+                        gpu_mask=placement.gpu_mask, cg_mask=placement.cg_mask)
+        gpus = [g for g in range(self.spec.num_gpus) if placement.gpu_mask >> g & 1]
+        cgs = [c for c in range(self.spec.num_coregroups) if placement.cg_mask >> c & 1]
+        self.topos[node].allocate(inst.name, gpus, cgs)
+        self.instances[inst.uid] = inst
+        self._by_node[node].add(inst.uid)
+        self._mask_cache[node] = None
+        return inst
+
+    def evict(self, uid: int) -> Instance:
+        inst = self.instances.pop(uid)
+        self.topos[inst.node].release(inst.name)
+        self._by_node[inst.node].discard(uid)
+        self._mask_cache[inst.node] = None
+        return inst
+
+    def invalidate_node(self, node: int) -> None:
+        self._mask_cache[node] = None
+
+    # ---- queries --------------------------------------------------------------------
+    def free_masks(self, node: int) -> tuple[int, int]:
+        if self.node_index:
+            cached = self._mask_cache[node]
+            if cached is None:
+                m = self.topos[node].as_masks()
+                cached = (m.free_gpu_mask, m.free_cg_mask)
+                self._mask_cache[node] = cached
+            return cached
+        m = self.topos[node].as_masks()
+        return m.free_gpu_mask, m.free_cg_mask
+
+    def instances_on(self, node: int) -> list[Instance]:
+        if self.node_index:
+            return [self.instances[u] for u in self._by_node[node]]
+        return [i for i in self.instances.values() if i.node == node]
+
+    def victims_on(self, node: int, preemptor_priority: int) -> list[Instance]:
+        """Potential victims: strictly lower priority and preemptible."""
+        return sorted(
+            (
+                i for i in self.instances_on(node)
+                if i.preemptible and i.priority < preemptor_priority
+            ),
+            key=lambda i: (i.priority, i.uid),
+        )
+
+    def arrays(self) -> ClusterArrays:
+        free_gpu = np.zeros(self.num_nodes, dtype=np.int32)
+        free_cg = np.zeros(self.num_nodes, dtype=np.int32)
+        for n, topo in enumerate(self.topos):
+            m = topo.as_masks()
+            free_gpu[n] = m.free_gpu_mask
+            free_cg[n] = m.free_cg_mask
+        return ClusterArrays(
+            free_gpu=free_gpu,
+            free_cg=free_cg,
+            numa_gpu_masks=self.spec.numa_gpu_masks,
+            numa_cg_masks=self.spec.numa_cg_masks,
+            socket_of_numa=self.spec.socket_of_numa_arr,
+        )
+
+    # ---- reporting --------------------------------------------------------------------
+    def count_by_workload(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for inst in self.instances.values():
+            out[inst.workload.name] = out.get(inst.workload.name, 0) + 1
+        return out
+
+    def allocation_snapshot(self) -> list[dict]:
+        """Fig. 8-style snapshot: per instance, its node/GPU indices and tier."""
+        from .placement import achieved_tier
+
+        rows = []
+        for inst in sorted(self.instances.values(), key=lambda i: (i.node, i.uid)):
+            gpus = [g for g in range(self.spec.num_gpus) if inst.gpu_mask >> g & 1]
+            rows.append({
+                "instance": inst.name,
+                "workload": inst.workload.name,
+                "node": inst.node,
+                "gpus": gpus,
+                "tier": achieved_tier(self.spec, inst.gpu_mask),
+            })
+        return rows
+
+    def cross_socket_instances(self) -> int:
+        """Fig. 8 headline number: instances whose GPUs span sockets."""
+        from .placement import achieved_tier, min_tier_for
+
+        return sum(
+            1
+            for inst in self.instances.values()
+            if inst.gpu_mask
+            and achieved_tier(self.spec, inst.gpu_mask)
+            > min_tier_for(self.spec, inst.gpu_mask.bit_count())
+        )

@@ -1,0 +1,31 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret=True`` everywhere in this container (CPU); flip to compiled mode
+on real TPU via the ``REPRO_PALLAS_COMPILED`` env var or the interpret kwarg.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import topo_score as _ts
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILED", "") != "1"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, block_q=128,
+                    block_k=128, interpret=_INTERPRET):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+
+def topo_score(combo_gpu, combo_cg, prio, spec, req, interpret=_INTERPRET):
+    return _ts.topo_score_pallas(combo_gpu, combo_cg, prio, spec, req,
+                                 interpret=interpret)

@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topology import ServerSpec
+
+
+# ---------------------------------------------------------------------------------
+# topo_score oracle
+# ---------------------------------------------------------------------------------
+
+def topo_score_ref(
+    combo_gpu: jnp.ndarray,      # int32[n] — freed GPU mask per subset
+    combo_cg: jnp.ndarray,       # int32[n]
+    prio: jnp.ndarray,           # int32[n] — sum of victim priorities
+    spec: ServerSpec,
+    need_gpus: int,
+    need_cgs: int,
+    cgs_per_bundle: int,
+    alpha: float,
+    tier_values: tuple[float, ...] = (1.0, 0.5, 0.1),
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (tier int32[n] with 3 = infeasible, score f32[n])."""
+    U = spec.num_numa
+    cnt_gpu = jnp.stack([
+        jax.lax.population_count(combo_gpu & int(spec.numa_gpu_masks[u]))
+        for u in range(U)], axis=-1)
+    cnt_cg = jnp.stack([
+        jax.lax.population_count(combo_cg & int(spec.numa_cg_masks[u]))
+        for u in range(U)], axis=-1)
+    if cgs_per_bundle > 0:
+        units = jnp.minimum(cnt_gpu, cnt_cg // cgs_per_bundle)
+    else:
+        units = cnt_gpu
+    numa_ok = jnp.any((units >= need_gpus) & (cnt_cg >= need_cgs), axis=-1)
+    sock_units = jnp.stack([
+        sum(units[..., u] for u in range(U) if spec.socket_of_numa(u) == s)
+        for s in range(spec.num_sockets)], axis=-1)
+    sock_cg = jnp.stack([
+        sum(cnt_cg[..., u] for u in range(U) if spec.socket_of_numa(u) == s)
+        for s in range(spec.num_sockets)], axis=-1)
+    sock_ok = jnp.any((sock_units >= need_gpus) & (sock_cg >= need_cgs),
+                      axis=-1)
+    glob_ok = (jnp.sum(units, axis=-1) >= need_gpus) & (
+        jnp.sum(cnt_cg, axis=-1) >= need_cgs)
+    tier = jnp.where(numa_ok, 0,
+                     jnp.where(sock_ok, 1,
+                               jnp.where(glob_ok, 2, 3))).astype(jnp.int32)
+    tv = jnp.asarray(tier_values + (0.0,), jnp.float32)
+    prio_term = jnp.where(prio > 0,
+                          1.0 / jnp.maximum(prio, 1).astype(jnp.float32), 1.0)
+    score = alpha * prio_term + (1.0 - alpha) * tv[tier]
+    score = jnp.where(tier < 3, score, -jnp.inf)
+    return tier, score
+
+
+# ---------------------------------------------------------------------------------
+# flash attention oracle
+# ---------------------------------------------------------------------------------
+
+def mha_ref(
+    q: jnp.ndarray,              # [B, H, Sq, d]
+    k: jnp.ndarray,              # [B, K, Sk, d]
+    v: jnp.ndarray,              # [B, K, Sk, d]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+) -> jnp.ndarray:
+    B, H, Sq, d = q.shape
+    K = k.shape[1]
+    G = H // K
+    qg = q.reshape(B, K, G, Sq, d)
+    scores = jnp.einsum("BKGSd,BKTd->BKGST", qg, k).astype(jnp.float32)
+    scores = scores * (d ** -0.5)
+    if causal:
+        rows = jax.lax.broadcasted_iota(jnp.int32, (Sq, k.shape[2]), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (Sq, k.shape[2]), 1)
+        mask = cols <= rows
+        if window is not None:
+            mask &= (rows - cols) < window
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("BKGST,BKTd->BKGSd", probs.astype(v.dtype), v)
+    return out.reshape(B, H, Sq, d)

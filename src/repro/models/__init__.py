@@ -1,0 +1,6 @@
+"""Model substrate: all assigned architectures in pure JAX."""
+from .api import ModelApi, build_model
+from .common import ModelConfig, MoEConfig, count_params
+
+__all__ = ["ModelApi", "build_model", "ModelConfig", "MoEConfig",
+           "count_params"]

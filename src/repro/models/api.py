@@ -1,0 +1,37 @@
+"""Uniform model API over every family (the launcher/serving entry point)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from . import encdec, lm
+from .common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable[[Any], Any]                     # key -> params
+    loss: Callable[[Any, dict], tuple]             # (params, batch) -> (loss, aux)
+    prefill: Callable[[Any, dict, int], tuple]     # -> (logits, caches)
+    decode_step: Callable[[Any, Any, Any, Any], tuple]  # -> (logits, caches)
+
+
+def build_model(cfg: ModelConfig) -> ModelApi:
+    cfg.validate()
+    if cfg.is_encdec:
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key: encdec.encdec_init(key, cfg),
+            loss=lambda p, b: encdec.encdec_loss(p, cfg, b),
+            prefill=lambda p, b, cap: encdec.encdec_prefill(p, cfg, b, cap),
+            decode_step=lambda p, c, t, pos: encdec.encdec_decode_step(
+                p, cfg, c, t, pos),
+        )
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: lm.lm_init(key, cfg),
+        loss=lambda p, b: lm.lm_loss(p, cfg, b),
+        prefill=lambda p, b, cap: lm.lm_prefill(p, cfg, b, cap),
+        decode_step=lambda p, c, t, pos: lm.lm_decode_step(p, cfg, c, t, pos),
+    )

@@ -1,0 +1,244 @@
+"""GQA/MQA attention with RoPE, optional QKV-bias / qk-norm / sliding window.
+
+One implementation covers every assigned arch's attention flavour:
+  * llama3 / qwen / gemma GQA (n_kv < n_heads), MQA (n_kv=1)
+  * qwen1.5/qwen2 QKV bias, qwen3 qk-RMSNorm
+  * mixtral sliding-window (SWA), recurrentgemma local attention
+  * seamless enc-dec: bidirectional self-attention + cross-attention
+  * paligemma prefix-LM masking
+
+Serving uses a unified cache: K is stored pre-rotated at absolute positions;
+``abs`` tracks each slot's absolute position (-1 = empty), which makes full
+and ring-buffer (windowed) caches the same code path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, apply_rope, dense_init, rmsnorm, split_keys
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd)),
+        "wk": dense_init(ks[1], (d, K, hd)),
+        "wv": dense_init(ks[2], (d, K, hd)),
+        "wo": dense_init(ks[3], (H, hd, d), scale=(H * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), jnp.float32)
+        p["bk"] = jnp.zeros((K, hd), jnp.float32)
+        p["bv"] = jnp.zeros((K, hd), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((hd,), jnp.float32)}
+        p["k_norm"] = {"scale": jnp.ones((hd,), jnp.float32)}
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x, kv_x=None):
+    kv_x = x if kv_x is None else kv_x
+    cd = cfg.compute_dtype
+    q = jnp.einsum("BSD,DHd->BSHd", x, p["wq"].astype(cd))
+    k = jnp.einsum("BSD,DKd->BSKd", kv_x, p["wk"].astype(cd))
+    v = jnp.einsum("BSD,DKd->BSKd", kv_x, p["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.rms_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.rms_eps)
+    return q, k, v
+
+
+def _gqa_attend(p, cfg: ModelConfig, q, k, v, mask):
+    """q: [B,S,H,hd]  k,v: [B,T,K,hd]  mask: bool broadcastable [B,1,1,S,T]."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    q = q.reshape(B, S, K, G, hd)
+    scores = jnp.einsum("BSKGd,BTKd->BKGST", q, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cfg.compute_dtype)
+    out = jnp.einsum("BKGST,BTKd->BSKGd", probs, v)
+    out = out.reshape(B, S, H, hd)
+    return jnp.einsum("BSHd,HdD->BSD", out, p["wo"].astype(cfg.compute_dtype))
+
+
+# ---------------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------------
+
+def make_mask(
+    s_q: int,
+    s_k: int,
+    *,
+    causal: bool,
+    window: int | None = None,
+    prefix_len: int | None = None,
+) -> jnp.ndarray:
+    """bool[1,1,1,s_q,s_k] — True where attention is allowed."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, (s_q, s_k), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (s_q, s_k), 1)
+    if causal:
+        m = cols <= rows
+        if window is not None:
+            m &= (rows - cols) < window
+        if prefix_len is not None:
+            # prefix-LM (paligemma): prefix tokens attend bidirectionally
+            m |= (rows < prefix_len) & (cols < prefix_len)
+    else:
+        m = jnp.ones((s_q, s_k), bool)
+    return m[None, None, None]
+
+
+# ---------------------------------------------------------------------------------
+# full-sequence forward (train / prefill / encoder / cross-attention)
+# ---------------------------------------------------------------------------------
+
+def attn_forward(
+    p,
+    cfg: ModelConfig,
+    x,
+    *,
+    positions,
+    mask,
+    kv_x=None,
+    kv_positions=None,
+    use_rope: bool = True,
+    mask_args: dict | None = None,
+):
+    q, k, v = _project_qkv(p, cfg, x, kv_x)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        kp = positions if kv_positions is None else kv_positions
+        k = apply_rope(k, kp, cfg.rope_theta)
+    chunk = cfg.attn_chunk_q
+    if (chunk and mask_args is not None and q.shape[1] > chunk
+            and q.shape[1] % chunk == 0):
+        out = _gqa_attend_chunked(p, cfg, q, k, v, chunk=chunk, **mask_args)
+    else:
+        out = _gqa_attend(p, cfg, q, k, v, mask)
+    return out, (k, v)
+
+
+def _gqa_attend_chunked(p, cfg: ModelConfig, q, k, v, *, chunk: int,
+                        causal: bool = True, window: int | None = None,
+                        prefix_len: int | None = None):
+    """Query-chunked attention (XLA-level flash): scores never exceed
+    [B, heads, chunk, S_k] — the S_q x S_k matrix is never materialized.
+
+    Online softmax is unnecessary because each chunk sees the FULL key range;
+    memory drops by S_q/chunk (e.g. 64x for 32k prefill at chunk=512).
+    """
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    Sk = k.shape[1]
+    nb = S // chunk
+    qb = jnp.moveaxis(q.reshape(B, nb, chunk, H, hd), 1, 0)   # [nb,B,c,H,hd]
+
+    def block(_, inp):
+        idx, qc = inp
+        off = idx * chunk
+        rows = off + jax.lax.broadcasted_iota(jnp.int32, (chunk, Sk), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, Sk), 1)
+        if causal:
+            m = cols <= rows
+            if window is not None:
+                m &= (rows - cols) < window
+            if prefix_len is not None:
+                m |= (rows < prefix_len) & (cols < prefix_len)
+        else:
+            m = jnp.ones((chunk, Sk), bool)
+        qg = qc.reshape(B, chunk, K, G, hd)
+        s = jnp.einsum("BSKGd,BTKd->BKGST", qg, k).astype(jnp.float32)
+        s = s * (hd ** -0.5)
+        s = jnp.where(m[None, None, None], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1).astype(cfg.compute_dtype)
+        oc = jnp.einsum("BKGST,BTKd->BSKGd", pr, v).reshape(B, chunk, H, hd)
+        return None, oc
+
+    _, ob = jax.lax.scan(block, None,
+                         (jnp.arange(nb, dtype=jnp.int32), qb))
+    out = jnp.moveaxis(ob, 0, 1).reshape(B, S, H, hd)
+    return jnp.einsum("BSHd,HdD->BSD", out, p["wo"].astype(cfg.compute_dtype))
+
+
+# ---------------------------------------------------------------------------------
+# serving cache
+# ---------------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=None) -> dict:
+    dtype = dtype or cfg.compute_dtype
+    return {
+        "k": jnp.zeros((batch, capacity, cfg.n_kv, cfg.hd), dtype),
+        "v": jnp.zeros((batch, capacity, cfg.n_kv, cfg.hd), dtype),
+        "abs": jnp.full((capacity,), -1, jnp.int32),
+    }
+
+
+def cache_spec(cfg: ModelConfig, batch: int, capacity: int, dtype) -> dict:
+    """ShapeDtypeStruct version of init_cache (for the dry-run)."""
+    return {
+        "k": jax.ShapeDtypeStruct((batch, capacity, cfg.n_kv, cfg.hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, capacity, cfg.n_kv, cfg.hd), dtype),
+        "abs": jax.ShapeDtypeStruct((capacity,), jnp.int32),
+    }
+
+
+def fill_cache(cache: dict, k, v, positions) -> dict:
+    """Write a prefill's rotated K/V into the cache (assumes S <= capacity and
+    positions are the trailing ones if the window wrapped)."""
+    W = cache["k"].shape[1]
+    S = k.shape[1]
+    if S > W:  # windowed cache: keep only the last W tokens
+        k, v = k[:, -W:], v[:, -W:]
+        positions = positions[-W:]
+        S = W
+    idx = positions % W
+    cache = dict(cache)
+    cache["k"] = cache["k"].at[:, idx].set(k)
+    cache["v"] = cache["v"].at[:, idx].set(v)
+    cache["abs"] = cache["abs"].at[idx].set(positions)
+    return cache
+
+
+def attn_decode(
+    p,
+    cfg: ModelConfig,
+    x,            # [B, 1, d]
+    cache: dict,
+    pos,          # scalar int32 — absolute position of the new token
+    *,
+    window: int | None = None,
+    use_rope: bool = True,
+):
+    """One decode step; returns (out [B,1,d], updated cache)."""
+    q, k_new, v_new = _project_qkv(p, cfg, x)
+    if use_rope:
+        posv = jnp.full((1,), pos, jnp.int32)
+        q = apply_rope(q, posv[None, :], cfg.rope_theta)
+        k_new = apply_rope(k_new, posv[None, :], cfg.rope_theta)
+    W = cache["k"].shape[1]
+    idx = pos % W
+    k = cache["k"].at[:, idx].set(k_new[:, 0])
+    v = cache["v"].at[:, idx].set(v_new[:, 0])
+    abs_pos = cache["abs"].at[idx].set(pos)
+    dist = pos - abs_pos                                   # [W]
+    valid = (abs_pos >= 0) & (dist >= 0)
+    if window is not None:
+        valid &= dist < window
+    mask = valid[None, None, None, None, :]                # [1,1,1,1,W]
+    out = _gqa_attend(p, cfg, q, k, v, mask)
+    return out, {"k": k, "v": v, "abs": abs_pos}

@@ -1,0 +1,163 @@
+"""Encoder-decoder backbone (seamless-m4t-medium class).
+
+The modality frontend is a stub per the assignment: ``input_specs`` provides
+precomputed frame embeddings [B, S_enc, d] for the encoder.  The decoder is a
+standard causal stack with cross-attention; serving uses a self-attention KV
+cache plus per-layer precomputed cross-attention K/V from the encoder memory.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import ffn
+from .common import (ModelConfig, Params, constrain_batch, embed_init,
+                     maybe_remat, rmsnorm, rmsnorm_init, split_keys,
+                     stack_layers)
+from .lm import chunked_xent, last_token_logits
+
+
+def _enc_block_init(key, cfg: ModelConfig) -> dict:
+    ks = split_keys(key, 2)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model),
+        "attn": attn.attn_init(ks[0], cfg),
+        "ln2": rmsnorm_init(cfg.d_model),
+        "mlp": ffn.mlp_init(ks[1], cfg),
+    }
+
+
+def _dec_block_init(key, cfg: ModelConfig) -> dict:
+    ks = split_keys(key, 3)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model),
+        "self_attn": attn.attn_init(ks[0], cfg),
+        "ln_x": rmsnorm_init(cfg.d_model),
+        "cross_attn": attn.attn_init(ks[1], cfg),
+        "ln2": rmsnorm_init(cfg.d_model),
+        "mlp": ffn.mlp_init(ks[2], cfg),
+    }
+
+
+def encdec_init(key, cfg: ModelConfig) -> Params:
+    ks = split_keys(key, 4)
+    return {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model),
+        "encoder": stack_layers(partial(_enc_block_init, cfg=cfg), ks[1],
+                                cfg.enc_layers),
+        "decoder": stack_layers(partial(_dec_block_init, cfg=cfg), ks[2],
+                                cfg.dec_layers),
+        "enc_norm": rmsnorm_init(cfg.d_model),
+        "final_norm": rmsnorm_init(cfg.d_model),
+        "head": embed_init(ks[3], cfg.vocab, cfg.d_model).T,
+    }
+
+
+def encode(params, cfg: ModelConfig, frames) -> jnp.ndarray:
+    """frames: [B, S_enc, d] stub embeddings -> encoder memory [B, S_enc, d]."""
+    x = frames.astype(cfg.compute_dtype)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None]
+    mask = attn.make_mask(S, S, causal=False)
+
+    def body(carry, bp):
+        carry = constrain_batch(carry)
+        h, _ = attn.attn_forward(bp["attn"], cfg,
+                                 rmsnorm(bp["ln1"], carry, cfg.rms_eps),
+                                 positions=positions, mask=mask)
+        y = carry + h
+        y = y + ffn.mlp_apply(bp["mlp"], cfg, rmsnorm(bp["ln2"], y, cfg.rms_eps))
+        return y, None
+
+    x, _ = jax.lax.scan(maybe_remat(body, cfg), x, params["encoder"])
+    return rmsnorm(params["enc_norm"], x, cfg.rms_eps)
+
+
+def _decoder_blocks(params, cfg: ModelConfig, x, memory, *, collect_cache=False,
+                    capacity=None):
+    S = x.shape[1]
+    Sm = memory.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None]
+    mem_positions = jnp.arange(Sm, dtype=jnp.int32)[None]
+    self_mask = attn.make_mask(S, S, causal=True)
+    cross_mask = attn.make_mask(S, Sm, causal=False)
+
+    def body(carry, bp):
+        y = constrain_batch(carry)
+        h, (k, v) = attn.attn_forward(bp["self_attn"], cfg,
+                                      rmsnorm(bp["ln1"], y, cfg.rms_eps),
+                                      positions=positions, mask=self_mask)
+        y = y + h
+        h, (ck, cv) = attn.attn_forward(
+            bp["cross_attn"], cfg, rmsnorm(bp["ln_x"], y, cfg.rms_eps),
+            positions=positions, mask=cross_mask, kv_x=memory,
+            kv_positions=mem_positions, use_rope=False)
+        y = y + h
+        y = y + ffn.mlp_apply(bp["mlp"], cfg, rmsnorm(bp["ln2"], y, cfg.rms_eps))
+        cache = None
+        if collect_cache:
+            cache = {
+                "self": attn.fill_cache(
+                    attn.init_cache(cfg, y.shape[0], capacity), k, v,
+                    positions[0]),
+                "cross_k": ck, "cross_v": cv,
+            }
+        return y, cache
+
+    x, caches = jax.lax.scan(maybe_remat(body, cfg), x, params["decoder"])
+    return x, caches
+
+
+def encdec_loss(params, cfg: ModelConfig, batch):
+    """batch: {"frames": [B,S_enc,d], "tokens": [B,S_dec]}."""
+    memory = encode(params, cfg, batch["frames"])
+    tokens = batch["tokens"]
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    hidden, _ = _decoder_blocks(params, cfg, x, memory)
+    hidden = rmsnorm(params["final_norm"], hidden, cfg.rms_eps)
+    labels = tokens[:, 1:]
+    mask = jnp.ones_like(labels, jnp.float32)
+    loss, n = chunked_xent(params, cfg, hidden[:, :-1], labels, mask)
+    return loss / jnp.maximum(n, 1.0), {}
+
+
+def encdec_prefill(params, cfg: ModelConfig, batch, capacity: int):
+    """Returns (last-token logits, caches incl. cross-attn K/V)."""
+    memory = encode(params, cfg, batch["frames"])
+    tokens = batch["tokens"]
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    hidden, caches = _decoder_blocks(params, cfg, x, memory,
+                                     collect_cache=True, capacity=capacity)
+    hidden = rmsnorm(params["final_norm"], hidden, cfg.rms_eps)
+    return last_token_logits(params, cfg, hidden[:, -1]), caches
+
+
+def encdec_decode_step(params, cfg: ModelConfig, caches, token, pos):
+    """One decoder token against cached self-KV + cross-KV."""
+    x1 = params["embed"].astype(cfg.compute_dtype)[token[:, None]]
+
+    def body(carry, xs):
+        bp, cache = xs
+        y = constrain_batch(carry)
+        h, self_cache = attn.attn_decode(
+            bp["self_attn"], cfg, rmsnorm(bp["ln1"], y, cfg.rms_eps), cache["self"],
+            pos)
+        y = y + h
+        # cross-attention against static memory K/V (no rope, no cache update)
+        q, _, _ = attn._project_qkv(bp["cross_attn"], cfg,
+                                    rmsnorm(bp["ln_x"], y, cfg.rms_eps))
+        Sm = cache["cross_k"].shape[1]
+        mask = jnp.ones((1, 1, 1, 1, Sm), bool)
+        h = attn._gqa_attend(bp["cross_attn"], cfg, q, cache["cross_k"],
+                             cache["cross_v"], mask)
+        y = y + h
+        y = y + ffn.mlp_apply(bp["mlp"], cfg, rmsnorm(bp["ln2"], y, cfg.rms_eps))
+        return y, {"self": self_cache, "cross_k": cache["cross_k"],
+                   "cross_v": cache["cross_v"]}
+
+    x1, caches = jax.lax.scan(maybe_remat(body, cfg), x1, (params["decoder"], caches))
+    x1 = rmsnorm(params["final_norm"], x1, cfg.rms_eps)
+    return last_token_logits(params, cfg, x1[:, 0]), caches

@@ -1,0 +1,425 @@
+"""Decoder-only language model covering all assigned families.
+
+Families map to block kinds:
+  dense / vlm        -> "attn"      (attn + gated MLP)
+  moe                -> "moe"       (attn + top-k MoE; optional SWA)
+  ssm (rwkv6)        -> "rwkv"      (time-mix + channel-mix)
+  hybrid (rec.gemma) -> "griffin"   (period-3 super-block: rglru, rglru,
+                                     local-attn — each followed by an MLP)
+
+Repeated blocks are stacked on a leading layer axis and run under
+``lax.scan``; caches/states are scanned in/out per layer.  Cross-entropy is
+computed in sequence chunks so full [T, vocab] logits are never materialized.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import ffn, recurrent as rec
+from .common import (ModelConfig, Params, constrain_batch, constrain_hidden,
+                     embed_init, maybe_remat, rmsnorm, rmsnorm_init,
+                     split_keys, stack_layers)
+
+LOSS_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------------
+# block init / apply
+# ---------------------------------------------------------------------------------
+
+def block_kind(cfg: ModelConfig) -> str:
+    if cfg.attn_pattern == "rwkv":
+        return "rwkv"
+    if cfg.attn_pattern == "griffin_1_2":
+        return "griffin"
+    return "moe" if cfg.moe is not None else "attn"
+
+
+def _attn_block_init(key, cfg: ModelConfig) -> dict:
+    ks = split_keys(key, 2)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model),
+        "attn": attn.attn_init(ks[0], cfg),
+        "ln2": rmsnorm_init(cfg.d_model),
+    }
+    if cfg.moe is not None:
+        p["moe"] = ffn.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = ffn.mlp_init(ks[1], cfg)
+    return p
+
+
+def _rwkv_block_init(key, cfg: ModelConfig) -> dict:
+    ks = split_keys(key, 2)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model),
+        "tm": rec.rwkv_timemix_init(ks[0], cfg),
+        "ln2": rmsnorm_init(cfg.d_model),
+        "cm": rec.rwkv_channelmix_init(ks[1], cfg),
+    }
+
+
+def _griffin_sub_init(key, cfg: ModelConfig, temporal: str) -> dict:
+    ks = split_keys(key, 2)
+    mix = (rec.rglru_block_init(ks[0], cfg) if temporal == "rglru"
+           else attn.attn_init(ks[0], cfg))
+    return {
+        "ln1": rmsnorm_init(cfg.d_model),
+        "mix": mix,
+        "ln2": rmsnorm_init(cfg.d_model),
+        "mlp": ffn.mlp_init(ks[1], cfg),
+    }
+
+
+def _griffin_block_init(key, cfg: ModelConfig) -> dict:
+    ks = split_keys(key, 3)
+    return {
+        "sub0": _griffin_sub_init(ks[0], cfg, "rglru"),
+        "sub1": _griffin_sub_init(ks[1], cfg, "rglru"),
+        "sub2": _griffin_sub_init(ks[2], cfg, "attn"),
+    }
+
+
+def _n_scanned(cfg: ModelConfig) -> tuple[int, int]:
+    """(#scanned blocks, #tail rglru layers) — tail only for griffin depth%3."""
+    if block_kind(cfg) == "griffin":
+        return cfg.n_layers // 3, cfg.n_layers % 3
+    return cfg.n_layers, 0
+
+
+def lm_init(key, cfg: ModelConfig) -> Params:
+    kind = block_kind(cfg)
+    ks = split_keys(key, 4)
+    init_one = {
+        "attn": _attn_block_init, "moe": _attn_block_init,
+        "rwkv": _rwkv_block_init, "griffin": _griffin_block_init,
+    }[kind]
+    n_blocks, n_tail = _n_scanned(cfg)
+    params: Params = {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model),
+        "blocks": stack_layers(partial(init_one, cfg=cfg), ks[1], n_blocks),
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+    if n_tail:
+        params["tail"] = stack_layers(
+            partial(_griffin_sub_init, cfg=cfg, temporal="rglru"), ks[2], n_tail)
+    if not cfg.tie_embeddings:
+        params["head"] = embed_init(ks[3], cfg.vocab, cfg.d_model).T
+    return params
+
+
+# ---------------------------------------------------------------------------------
+# full-sequence block application (train / prefill)
+# ---------------------------------------------------------------------------------
+
+def _apply_attn_block(bp, cfg: ModelConfig, x, positions, mask, window,
+                      capacity=None, mask_args=None):
+    h, (k, v) = attn.attn_forward(bp["attn"], cfg, rmsnorm(bp["ln1"], x,
+                                                           cfg.rms_eps),
+                                  positions=positions, mask=mask,
+                                  mask_args=mask_args)
+    x = x + h
+    if "moe" in bp:
+        h, aux = ffn.moe_apply(bp["moe"], cfg, rmsnorm(bp["ln2"], x,
+                                                       cfg.rms_eps))
+    else:
+        h, aux = ffn.mlp_apply(bp["mlp"], cfg, rmsnorm(bp["ln2"], x,
+                                                       cfg.rms_eps)), None
+    x = x + h
+    cache = None
+    if capacity is not None:
+        cache = attn.fill_cache(
+            attn.init_cache(cfg, x.shape[0], capacity), k, v, positions[0])
+    return x, cache, aux
+
+
+def _apply_rwkv_block(bp, cfg: ModelConfig, x, collect):
+    h, tm_state = rec.rwkv_timemix_forward(bp["tm"], cfg,
+                                           rmsnorm(bp["ln1"], x, cfg.rms_eps))
+    x = x + h
+    xn = rmsnorm(bp["ln2"], x, cfg.rms_eps)
+    xn_prev = jnp.concatenate([jnp.zeros_like(xn[:, :1]), xn[:, :-1]], axis=1)
+    x = x + rec.rwkv_channelmix(bp["cm"], cfg, xn, xn_prev)
+    cache = None
+    if collect:
+        cache = {"S": tm_state["S"], "x_prev_tm": tm_state["x_prev"],
+                 "x_prev_cm": xn[:, -1]}
+    return x, cache
+
+
+def _apply_griffin_sub(bp, cfg: ModelConfig, x, positions, local_mask,
+                       temporal, capacity=None):
+    xn = rmsnorm(bp["ln1"], x, cfg.rms_eps)
+    cache = None
+    if temporal == "rglru":
+        h, state = rec.rglru_block_forward(bp["mix"], cfg, xn)
+        if capacity is not None:
+            cache = state
+    else:
+        h, (k, v) = attn.attn_forward(bp["mix"], cfg, xn, positions=positions,
+                                      mask=local_mask)
+        if capacity is not None:
+            cap = min(capacity, cfg.local_window or capacity)
+            cache = attn.fill_cache(
+                attn.init_cache(cfg, x.shape[0], cap), k, v, positions[0])
+    x = x + h
+    x = x + ffn.mlp_apply(bp["mlp"], cfg, rmsnorm(bp["ln2"], x, cfg.rms_eps))
+    return x, cache
+
+
+def _forward_blocks(params, cfg: ModelConfig, x, positions, *,
+                    prefix_len=None, collect_cache=False, capacity=None):
+    """Run all blocks.  Returns (hidden, caches, aux)."""
+    kind = block_kind(cfg)
+    S = x.shape[1]
+    cap = capacity if collect_cache else None
+
+    if kind in ("attn", "moe"):
+        window = cfg.swa_window
+        mask_args = dict(causal=True, window=window, prefix_len=prefix_len)
+        mask = attn.make_mask(S, S, causal=True, window=window,
+                              prefix_len=prefix_len)
+
+        def body(carry, bp):
+            carry = constrain_hidden(carry, cfg)
+            y, cache, aux = _apply_attn_block(bp, cfg, carry, positions, mask,
+                                              window, cap, mask_args)
+            lb = aux["load_balance_loss"] if aux else jnp.float32(0)
+            return y, (cache, lb)
+
+        x, (caches, lb) = jax.lax.scan(maybe_remat(body, cfg), x, params["blocks"])
+        return x, caches, {"load_balance_loss": jnp.mean(lb)}
+
+    if kind == "rwkv":
+        def body(carry, bp):
+            carry = constrain_hidden(carry, cfg)
+            y, cache = _apply_rwkv_block(bp, cfg, carry, collect_cache)
+            return y, cache
+
+        x, caches = jax.lax.scan(maybe_remat(body, cfg), x, params["blocks"])
+        return x, caches, {}
+
+    # griffin
+    local_mask = attn.make_mask(S, S, causal=True, window=cfg.local_window)
+
+    def body(carry, bp):
+        y = constrain_hidden(carry, cfg)
+        y, c0 = _apply_griffin_sub(bp["sub0"], cfg, y, positions, local_mask,
+                                   "rglru", cap)
+        y, c1 = _apply_griffin_sub(bp["sub1"], cfg, y, positions, local_mask,
+                                   "rglru", cap)
+        y, c2 = _apply_griffin_sub(bp["sub2"], cfg, y, positions, local_mask,
+                                   "attn", cap)
+        return y, {"sub0": c0, "sub1": c1, "sub2": c2}
+
+    x, caches = jax.lax.scan(maybe_remat(body, cfg), x, params["blocks"])
+    if "tail" in params:
+        def tail_body(carry, bp):
+            carry = constrain_batch(carry)
+            y, c = _apply_griffin_sub(bp, cfg, carry, positions, local_mask,
+                                      "rglru", cap)
+            return y, c
+
+        x, tail_caches = jax.lax.scan(maybe_remat(tail_body, cfg), x, params["tail"])
+        caches = {"main": caches, "tail": tail_caches}
+    elif collect_cache:
+        caches = {"main": caches}
+    return x, caches, {}
+
+
+# ---------------------------------------------------------------------------------
+# embedding / head / loss
+# ---------------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens, prefix_embeds=None):
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.compute_dtype), x],
+                            axis=1)
+    return constrain_batch(x)
+
+
+def _head_weight(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T         # [D, V]
+    return params["head"]
+
+
+def chunked_xent(params, cfg: ModelConfig, hidden, labels, mask):
+    """Cross-entropy over sequence chunks; never materializes [T, V] logits.
+
+    hidden: [B, S, D]; labels/mask: [B, S].  Returns (loss, n_tokens).
+    """
+    w = _head_weight(params, cfg).astype(cfg.compute_dtype)
+    B, S, D = hidden.shape
+    n_chunks = max(S // LOSS_CHUNK, 1)
+    csize = S // n_chunks
+    hid = hidden[:, :n_chunks * csize].reshape(B, n_chunks, csize, D)
+    lab = labels[:, :n_chunks * csize].reshape(B, n_chunks, csize)
+    msk = mask[:, :n_chunks * csize].reshape(B, n_chunks, csize)
+
+    def body(acc, xs):
+        h, l, m = xs                               # [B,c,D], [B,c], [B,c]
+        h = constrain_batch(h)
+        logits = jnp.einsum("BCD,DV->BCV", h, w).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        loss = jnp.sum((lse - ll) * m)
+        return (acc[0] + loss, acc[1] + jnp.sum(m)), None
+
+    tm = lambda t: jnp.moveaxis(t, 1, 0)
+    (loss, n), _ = jax.lax.scan(maybe_remat(body, cfg), (jnp.float32(0), jnp.float32(0)),
+                                (tm(hid), tm(lab), tm(msk)))
+    return loss, n
+
+
+def last_token_logits(params, cfg: ModelConfig, hidden_last):
+    """hidden_last: [B, D] -> [B, V] (f32)."""
+    w = _head_weight(params, cfg).astype(cfg.compute_dtype)
+    return jnp.einsum("BD,DV->BV", hidden_last, w).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------------
+
+def lm_loss(params, cfg: ModelConfig, batch) -> tuple[jnp.ndarray, dict]:
+    """batch: {"tokens": [B,S] int32, optional "prefix_embeds": [B,P,D]}."""
+    tokens = batch["tokens"]
+    prefix = batch.get("prefix_embeds")
+    x = embed_tokens(params, cfg, tokens, prefix)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None]
+    prefix_len = cfg.frontend_len if (cfg.prefix_lm and prefix is not None) else None
+    hidden, _, aux = _forward_blocks(params, cfg, x, positions,
+                                     prefix_len=prefix_len)
+    hidden = rmsnorm(params["final_norm"], hidden, cfg.rms_eps)
+    P = prefix.shape[1] if prefix is not None else 0
+    # next-token prediction on the text region
+    hid = hidden[:, P:P + tokens.shape[1] - 1]
+    labels = tokens[:, 1:]
+    mask = jnp.ones_like(labels, jnp.float32)
+    loss, n = chunked_xent(params, cfg, hid, labels, mask)
+    total = loss / jnp.maximum(n, 1.0)
+    if "load_balance_loss" in aux:
+        total = total + 0.01 * aux["load_balance_loss"]
+    return total, {"xent": loss / jnp.maximum(n, 1.0), **aux}
+
+
+def lm_prefill(params, cfg: ModelConfig, batch, capacity: int):
+    """Prefill: returns (last-token logits [B,V], caches pytree)."""
+    tokens = batch["tokens"]
+    prefix = batch.get("prefix_embeds")
+    x = embed_tokens(params, cfg, tokens, prefix)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None]
+    prefix_len = cfg.frontend_len if (cfg.prefix_lm and prefix is not None) else None
+    hidden, caches, _ = _forward_blocks(params, cfg, x, positions,
+                                        prefix_len=prefix_len,
+                                        collect_cache=True, capacity=capacity)
+    hidden = rmsnorm(params["final_norm"], hidden, cfg.rms_eps)
+    return last_token_logits(params, cfg, hidden[:, -1]), caches
+
+
+# ---------------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------------
+
+def _decode_attn_block(bp, cfg: ModelConfig, x1, cache, pos, window):
+    h, cache = attn.attn_decode(bp["attn"], cfg,
+                                rmsnorm(bp["ln1"], x1, cfg.rms_eps)[:, None],
+                                cache, pos, window=window)
+    x1 = x1 + h[:, 0]
+    xn = rmsnorm(bp["ln2"], x1, cfg.rms_eps)
+    if "moe" in bp:
+        h, _ = ffn.moe_apply(bp["moe"], cfg, xn[:, None])
+        h = h[:, 0]
+    else:
+        h = ffn.mlp_apply(bp["mlp"], cfg, xn[:, None])[:, 0]
+    return x1 + h, cache
+
+
+def _decode_rwkv_block(bp, cfg: ModelConfig, x1, cache):
+    h, tm_state = rec.rwkv_timemix_decode(
+        bp["tm"], cfg, rmsnorm(bp["ln1"], x1, cfg.rms_eps),
+        {"S": cache["S"], "x_prev": cache["x_prev_tm"]})
+    x1 = x1 + h
+    xn = rmsnorm(bp["ln2"], x1, cfg.rms_eps)
+    x1 = x1 + rec.rwkv_channelmix(bp["cm"], cfg, xn, cache["x_prev_cm"])
+    return x1, {"S": tm_state["S"], "x_prev_tm": tm_state["x_prev"],
+                "x_prev_cm": xn}
+
+
+def _decode_griffin_sub(bp, cfg: ModelConfig, x1, cache, pos, temporal):
+    xn = rmsnorm(bp["ln1"], x1, cfg.rms_eps)
+    if temporal == "rglru":
+        h, cache = rec.rglru_block_decode(bp["mix"], cfg, xn, cache)
+    else:
+        h, cache = attn.attn_decode(bp["mix"], cfg, xn[:, None], cache, pos,
+                                    window=cfg.local_window)
+        h = h[:, 0]
+    x1 = x1 + h
+    x1 = x1 + ffn.mlp_apply(bp["mlp"], cfg,
+                            rmsnorm(bp["ln2"], x1, cfg.rms_eps)[:, None])[:, 0]
+    return x1, cache
+
+
+def lm_decode_step(params, cfg: ModelConfig, caches, token, pos):
+    """One token for the whole batch.  token: [B] int32, pos: scalar int32.
+
+    Returns (logits [B,V] f32, new caches).
+    """
+    kind = block_kind(cfg)
+    x1 = embed_tokens(params, cfg, token[:, None])[:, 0]
+
+    if kind in ("attn", "moe"):
+        def body(carry, xs):
+            bp, cache = xs
+            carry = constrain_batch(carry)
+            y, cache = _decode_attn_block(bp, cfg, carry, cache, pos,
+                                          cfg.swa_window)
+            return y, cache
+
+        x1, caches = jax.lax.scan(maybe_remat(body, cfg), x1, (params["blocks"], caches))
+    elif kind == "rwkv":
+        def body(carry, xs):
+            bp, cache = xs
+            carry = constrain_batch(carry)
+            y, cache = _decode_rwkv_block(bp, cfg, carry, cache)
+            return y, cache
+
+        x1, caches = jax.lax.scan(maybe_remat(body, cfg), x1, (params["blocks"], caches))
+    else:  # griffin
+        def body(carry, xs):
+            bp, cache = xs
+            y = constrain_batch(carry)
+            y, c0 = _decode_griffin_sub(bp["sub0"], cfg, y, cache["sub0"], pos,
+                                        "rglru")
+            y, c1 = _decode_griffin_sub(bp["sub1"], cfg, y, cache["sub1"], pos,
+                                        "rglru")
+            y, c2 = _decode_griffin_sub(bp["sub2"], cfg, y, cache["sub2"], pos,
+                                        "attn")
+            return y, {"sub0": c0, "sub1": c1, "sub2": c2}
+
+        x1, main = jax.lax.scan(maybe_remat(body, cfg), x1, (params["blocks"], caches["main"]))
+        new_caches = {"main": main}
+        if "tail" in params:
+            def tail_body(carry, xs):
+                bp, cache = xs
+                y, c = _decode_griffin_sub(bp, cfg, carry, cache, pos, "rglru")
+                return y, c
+
+            x1, tail = jax.lax.scan(maybe_remat(tail_body, cfg), x1,
+                                    (params["tail"], caches["tail"]))
+            new_caches["tail"] = tail
+        caches = new_caches
+
+    x1 = rmsnorm(params["final_norm"], x1, cfg.rms_eps)
+    return last_token_logits(params, cfg, x1), caches

@@ -1,0 +1,251 @@
+"""Recurrent sequence mixers: RWKV-6 ("Finch") time/channel mix and the
+RG-LRU block of RecurrentGemma/Griffin.
+
+TPU adaptation notes (DESIGN.md §3):
+  * RG-LRU is a *diagonal* linear recurrence, so training uses
+    ``lax.associative_scan`` (log-depth, VPU-friendly) instead of a sequential
+    loop.
+  * RWKV-6 carries a matrix state (hd×hd per head) with data-dependent
+    per-channel decay; the exact sequential ``lax.scan`` is the reference
+    path (used for decode and correctness); a chunked MXU formulation is the
+    hillclimb lever for the train cell (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, split_keys
+
+LORA_R = 32       # rwkv6 ddlerp lora rank
+DECAY_R = 64      # rwkv6 decay lora rank
+RG_C = 8.0        # rg-lru temperature constant
+
+
+# ===================================================================================
+# RWKV-6
+# ===================================================================================
+
+def rwkv_heads(cfg: ModelConfig) -> tuple[int, int]:
+    hd = 64
+    return cfg.d_model // hd, hd
+
+
+def rwkv_timemix_init(key, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    H, hd = rwkv_heads(cfg)
+    ks = split_keys(key, 10)
+    return {
+        "mu_x": jnp.zeros((D,), jnp.float32),
+        "mu": jnp.zeros((5, D), jnp.float32),              # r,k,v,w,g base mixes
+        "maa_w1": dense_init(ks[0], (D, 5 * LORA_R), scale=0.01),
+        "maa_w2": dense_init(ks[1], (5, LORA_R, D), scale=0.01),
+        "wr": dense_init(ks[2], (D, D)),
+        "wk": dense_init(ks[3], (D, D)),
+        "wv": dense_init(ks[4], (D, D)),
+        "wg": dense_init(ks[5], (D, D)),
+        "wo": dense_init(ks[6], (D, D)),
+        "w0": jnp.full((D,), -3.0, jnp.float32),           # decay bias
+        "wd1": dense_init(ks[7], (D, DECAY_R), scale=0.01),
+        "wd2": dense_init(ks[8], (DECAY_R, D), scale=0.01),
+        "u": dense_init(ks[9], (H, hd), scale=0.5),        # bonus (time_faaaa)
+        "gn_scale": jnp.ones((D,), jnp.float32),           # per-head group norm
+    }
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent token-shift interpolation -> 5 mixed streams [...,5,D]."""
+    base = x + xx * p["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(jnp.einsum("...D,DR->...R", base,
+                               p["maa_w1"].astype(x.dtype)))
+    B5 = lora.shape[-1] // 5
+    lora = lora.reshape(*lora.shape[:-1], 5, B5)
+    delta = jnp.einsum("...FR,FRD->...FD", lora, p["maa_w2"].astype(x.dtype))
+    mix = p["mu"].astype(x.dtype) + delta                  # [...,5,D]
+    return x[..., None, :] + xx[..., None, :] * mix
+
+
+def _rwkv_projections(p, cfg: ModelConfig, x, x_prev):
+    """Common to train and decode: compute r,k,v,w,g from x and shifted x."""
+    H, hd = rwkv_heads(cfg)
+    xx = x_prev - x
+    mixed = _ddlerp(p, x, xx)                              # [...,5,D]
+    xr, xk, xv, xw, xg = (mixed[..., i, :] for i in range(5))
+    cd = x.dtype
+    r = jnp.einsum("...D,DE->...E", xr, p["wr"].astype(cd))
+    k = jnp.einsum("...D,DE->...E", xk, p["wk"].astype(cd))
+    v = jnp.einsum("...D,DE->...E", xv, p["wv"].astype(cd))
+    g = jax.nn.silu(jnp.einsum("...D,DE->...E", xg, p["wg"].astype(cd)))
+    dec = jnp.tanh(jnp.einsum("...D,DR->...R", xw, p["wd1"].astype(cd)))
+    logw = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "...R,RD->...D", dec.astype(jnp.float32), p["wd2"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(jnp.clip(logw, -10.0, 6.0)))      # data-dependent decay
+    split = lambda t: t.reshape(*t.shape[:-1], H, hd)
+    return split(r), split(k), split(v), split(w.astype(jnp.float32)), g
+
+
+def _groupnorm_heads(scale, y, H, hd, eps=1e-5):
+    """Per-head normalization of the wkv output (rwkv's GroupNorm(H))."""
+    yf = y.astype(jnp.float32)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yn = (yf - mu) * jax.lax.rsqrt(var + eps)
+    yn = yn.reshape(*y.shape[:-2], H * hd) * scale.astype(jnp.float32)
+    return yn
+
+
+def rwkv_timemix_forward(p, cfg: ModelConfig, x, state=None):
+    """Full-sequence forward. x: [B,S,D].  Returns (out, new_state).
+
+    state = {"S": [B,H,hd,hd] f32, "x_prev": [B,D]} (None -> zeros).
+    """
+    B, S, D = x.shape
+    H, hd = rwkv_heads(cfg)
+    if state is None:
+        state = {
+            "S": jnp.zeros((B, H, hd, hd), jnp.float32),
+            "x_prev": jnp.zeros((B, D), x.dtype),
+        }
+    x_shift = jnp.concatenate([state["x_prev"][:, None], x[:, :-1]], axis=1)
+    r, k, v, w, g = _rwkv_projections(p, cfg, x, x_shift)
+
+    u = p["u"].astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                               # [B,H,hd] each
+        rt = rt.astype(jnp.float32)
+        kt = kt.astype(jnp.float32)
+        vt = vt.astype(jnp.float32)
+        kv = kt[..., :, None] * vt[..., None, :]           # [B,H,hd,hd]
+        yt = jnp.einsum("BHi,BHij->BHj", rt, S + u[..., :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, yt
+
+    tm = lambda t: jnp.moveaxis(t, 1, 0)                   # time-major for scan
+    S_fin, y = jax.lax.scan(step, state["S"], (tm(r), tm(k), tm(v), tm(w)))
+    y = jnp.moveaxis(y, 0, 1)                              # [B,S,H,hd]
+    y = _groupnorm_heads(p["gn_scale"], y, H, hd).astype(x.dtype)
+    out = jnp.einsum("BSD,DE->BSE", y * g, p["wo"].astype(x.dtype))
+    return out, {"S": S_fin, "x_prev": x[:, -1]}
+
+
+def rwkv_timemix_decode(p, cfg: ModelConfig, x1, state):
+    """Single-token step. x1: [B,D]."""
+    H, hd = rwkv_heads(cfg)
+    r, k, v, w, g = _rwkv_projections(p, cfg, x1, state["x_prev"])
+    rt = r.astype(jnp.float32)
+    kt = k.astype(jnp.float32)
+    vt = v.astype(jnp.float32)
+    u = p["u"].astype(jnp.float32)
+    kv = kt[..., :, None] * vt[..., None, :]
+    y = jnp.einsum("BHi,BHij->BHj", rt, state["S"] + u[..., :, None] * kv)
+    S = w[..., :, None] * state["S"] + kv
+    y = _groupnorm_heads(p["gn_scale"], y[:, None], H, hd)[:, 0].astype(x1.dtype)
+    out = jnp.einsum("BD,DE->BE", y * g, p["wo"].astype(x1.dtype))
+    return out, {"S": S, "x_prev": x1}
+
+
+def rwkv_channelmix_init(key, cfg: ModelConfig) -> dict:
+    D, f = cfg.d_model, cfg.d_ff
+    ks = split_keys(key, 3)
+    return {
+        "mu_k": jnp.zeros((D,), jnp.float32),
+        "mu_r": jnp.zeros((D,), jnp.float32),
+        "wk": dense_init(ks[0], (D, f)),
+        "wv": dense_init(ks[1], (f, D)),
+        "wr": dense_init(ks[2], (D, D)),
+    }
+
+
+def rwkv_channelmix(p, cfg: ModelConfig, x, x_prev):
+    """x: [..., D]; x_prev: same shape (token-shifted)."""
+    cd = x.dtype
+    xx = x_prev - x
+    xk = x + xx * p["mu_k"].astype(cd)
+    xr = x + xx * p["mu_r"].astype(cd)
+    k = jnp.square(jax.nn.relu(jnp.einsum("...D,DF->...F", xk,
+                                          p["wk"].astype(cd))))
+    kv = jnp.einsum("...F,FD->...D", k, p["wv"].astype(cd))
+    return jax.nn.sigmoid(jnp.einsum("...D,DE->...E", xr,
+                                     p["wr"].astype(cd))) * kv
+
+
+# ===================================================================================
+# RG-LRU (RecurrentGemma / Griffin)
+# ===================================================================================
+
+def rglru_block_init(key, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    R = cfg.rnn_width or D
+    K = cfg.conv_kernel
+    ks = split_keys(key, 6)
+    return {
+        "w_y": dense_init(ks[0], (D, R)),
+        "w_x": dense_init(ks[1], (D, R)),
+        "conv_w": dense_init(ks[2], (K, R), scale=K ** -0.5),
+        "conv_b": jnp.zeros((R,), jnp.float32),
+        "w_r": dense_init(ks[3], (R, R), scale=0.01),
+        "b_r": jnp.zeros((R,), jnp.float32),
+        "w_i": dense_init(ks[4], (R, R), scale=0.01),
+        "b_i": jnp.zeros((R,), jnp.float32),
+        "lam": jnp.full((R,), 3.0, jnp.float32),   # sigma(3) ~ .95 slow decay
+        "w_out": dense_init(ks[5], (R, D)),
+    }
+
+
+def _causal_conv(w, b, x, prev):
+    """Depthwise causal conv1d.  x: [B,S,R]; prev: [B,K-1,R] carried state."""
+    K = w.shape[0]
+    full = jnp.concatenate([prev, x], axis=1)               # [B, S+K-1, R]
+    S = x.shape[1]
+    out = sum(full[:, i:i + S] * w[i].astype(x.dtype) for i in range(K))
+    return out + b.astype(x.dtype), full[:, -(K - 1):]
+
+
+def _rglru_gates(p, xc):
+    xf = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_r"].astype(jnp.float32) + p["b_r"])
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = -RG_C * r * jax.nn.softplus(p["lam"])           # <= 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 0.0, 1.0)) * (i * xf)
+    return a, b
+
+
+def rglru_block_forward(p, cfg: ModelConfig, x, state=None):
+    """Full-sequence Griffin recurrent block.  x: [B,S,D]."""
+    B, S, D = x.shape
+    R = cfg.rnn_width or D
+    K = cfg.conv_kernel
+    cd = x.dtype
+    if state is None:
+        state = {
+            "h": jnp.zeros((B, R), jnp.float32),
+            "conv": jnp.zeros((B, K - 1, R), cd),
+        }
+    y = jax.nn.gelu(jnp.einsum("BSD,DR->BSR", x, p["w_y"].astype(cd)))
+    xb = jnp.einsum("BSD,DR->BSR", x, p["w_x"].astype(cd))
+    xc, conv_state = _causal_conv(p["conv_w"], p["conv_b"], xb, state["conv"])
+    a, b = _rglru_gates(p, xc)                              # [B,S,R] f32
+    # h_t = a_t h_{t-1} + b_t  — diagonal linear recurrence => associative scan
+    b = b.at[:, 0].add(a[:, 0] * state["h"])                # fold in carry
+    def comb(lhs, rhs):
+        return (rhs[0] * lhs[0], rhs[0] * lhs[1] + rhs[1])
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    out = jnp.einsum("BSR,RD->BSD", (h.astype(cd) * y), p["w_out"].astype(cd))
+    return out, {"h": h[:, -1], "conv": conv_state}
+
+
+def rglru_block_decode(p, cfg: ModelConfig, x1, state):
+    """Single-token step. x1: [B,D]."""
+    cd = x1.dtype
+    y = jax.nn.gelu(x1 @ p["w_y"].astype(cd))
+    xb = x1 @ p["w_x"].astype(cd)
+    K = p["conv_w"].shape[0]
+    window = jnp.concatenate([state["conv"], xb[:, None]], axis=1)  # [B,K,R]
+    xc = sum(window[:, i] * p["conv_w"][i].astype(cd) for i in range(K))
+    xc = xc + p["conv_b"].astype(cd)
+    a, b = _rglru_gates(p, xc)
+    h = a * state["h"] + b
+    out = (h.astype(cd) * y) @ p["w_out"].astype(cd)
+    return out, {"h": h, "conv": window[:, 1:]}

@@ -1,0 +1,3 @@
+from .engine import BatchQueue, Request, ServeEngine
+
+__all__ = ["BatchQueue", "Request", "ServeEngine"]

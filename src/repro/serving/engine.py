@@ -1,0 +1,119 @@
+"""Serving engine: request batching + prefill/decode loop.
+
+One ServeEngine corresponds to one scheduler *instance* from the paper's
+co-location model: the topology-aware scheduler places/preempts instances,
+and each instance runs this engine.  The continuous-batching queue pads
+requests to a fixed batch and runs jit'd prefill + decode steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.shapes import cache_capacity
+from repro.models.api import ModelApi
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int = 16
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchQueue:
+    """Pads pending requests into fixed [B, S] prompt batches."""
+
+    def __init__(self, batch_size: int, seq_len: int) -> None:
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.pending: list[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def next_batch(self) -> list[Request] | None:
+        if not self.pending:
+            return None
+        batch = self.pending[:self.batch_size]
+        self.pending = self.pending[self.batch_size:]
+        return batch
+
+    def pad_prompts(self, batch: list[Request]) -> np.ndarray:
+        out = np.zeros((self.batch_size, self.seq_len), np.int32)
+        for i, r in enumerate(batch):
+            s = min(len(r.prompt), self.seq_len)
+            out[i, -s:] = r.prompt[:s]        # left-pad (decode continues right)
+        return out
+
+
+class ServeEngine:
+    def __init__(self, api: ModelApi, params: Any, batch_size: int,
+                 seq_len: int, donate_cache: bool = True) -> None:
+        self.api = api
+        self.cfg = api.cfg
+        self.params = params
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        # the cache must hold the modality prefix in addition to the text
+        prefix = self.cfg.frontend_len if self.cfg.frontend == "patch" else 0
+        self.capacity = cache_capacity(self.cfg, prefix + seq_len)
+        cap = self.capacity
+        self._prefill = jax.jit(lambda p, b: api.prefill(p, b, cap))
+        self._decode = jax.jit(
+            api.decode_step,
+            donate_argnums=(1,) if donate_cache else (),
+        )
+        self.queue = BatchQueue(batch_size, seq_len)
+        self.stats = {"prefill_s": [], "decode_s": [], "tokens": 0}
+
+    def _make_batch(self, prompts: np.ndarray) -> dict:
+        batch: dict[str, Any] = {"tokens": jnp.asarray(prompts)}
+        B = prompts.shape[0]
+        if self.cfg.is_encdec:
+            batch["frames"] = jnp.zeros(
+                (B, self.seq_len, self.cfg.d_model), self.cfg.compute_dtype)
+        elif self.cfg.frontend == "patch":
+            batch["prefix_embeds"] = jnp.zeros(
+                (B, self.cfg.frontend_len, self.cfg.d_model),
+                self.cfg.compute_dtype)
+        return batch
+
+    def run(self, requests: list[Request], greedy: bool = True) -> list[Request]:
+        for r in requests:
+            self.queue.submit(r)
+        while True:
+            group = self.queue.next_batch()
+            if group is None:
+                break
+            prompts = self.queue.pad_prompts(group)
+            t0 = time.perf_counter()
+            logits, caches = jax.block_until_ready(
+                self._prefill(self.params, self._make_batch(prompts)))
+            self.stats["prefill_s"].append(time.perf_counter() - t0)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            steps = max(r.max_new_tokens for r in group)
+            prefix = (self.cfg.frontend_len if self.cfg.frontend == "patch"
+                      else 0)
+            pos = prefix + prompts.shape[1]
+            for t in range(steps):
+                for i, r in enumerate(group):
+                    if t < r.max_new_tokens:
+                        r.output.append(int(tok[i]))
+                t0 = time.perf_counter()
+                logits, caches = jax.block_until_ready(
+                    self._decode(self.params, caches, tok,
+                                 jnp.int32(pos + t)))
+                self.stats["decode_s"].append(time.perf_counter() - t0)
+                self.stats["tokens"] += len(group)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            for r in group:
+                r.done = True
+        return requests

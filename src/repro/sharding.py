@@ -1,0 +1,215 @@
+"""Partition rules: param/batch/cache pytrees -> NamedSharding.
+
+Scheme (DESIGN.md §6): batch over ("pod","data"); weights FSDP-sharded over
+"data" and tensor-parallel over "model" (Megatron split: heads / d_ff /
+vocab); experts over "model" when the expert count divides it (true EP),
+expert-TP otherwise.  Dims that do not divide their mesh axis are REPLICATED
+by default — visible as redundant compute in the roofline — and re-sharded in
+hillclimb configs (e.g. qwen2 head padding), keeping the baseline honest.
+
+Rules are name-based on pytree paths, so they cover params, optimizer states
+(mirror params), and serving caches uniformly.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+BATCH_AXES = ("pod", "data")
+
+
+def _axes(mesh: Mesh) -> tuple[tuple[str, ...], str, str]:
+    names = tuple(mesh.axis_names)
+    batch = tuple(a for a in BATCH_AXES if a in names)
+    return batch, ("data" if "data" in names else names[0]), "model"
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and n % int(mesh.shape[axis]) == 0
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------------
+
+def param_spec(cfg: ModelConfig, mesh: Mesh, path: str, shape: tuple[int, ...]
+               ) -> P:
+    """PartitionSpec for one parameter leaf (leading dim may be the layer
+    stack; rules key on the trailing structure + leaf name)."""
+    _, fsdp, tp = _axes(mesh)
+    name = path.rsplit("/", 1)[-1]
+    stacked = ("blocks/" in path or "tail/" in path or "encoder/" in path
+               or "decoder/" in path)
+    L = (None,) if stacked else ()
+    # ZeRO-1: parameter leaves drop the FSDP axis (optimizer-state mirrors
+    # under opt/m, opt/v keep it — they never enter the fwd/bwd graph)
+    zero1_leaf = cfg.zero1 and path.startswith("params")
+
+    def maybe(axis: str, n: int):
+        if axis == fsdp and zero1_leaf:
+            return None
+        return axis if _div(n, mesh, axis) else None
+
+    d = len(shape) - len(L)
+
+    if name == "embed":
+        return P(maybe(tp, shape[0]), maybe(fsdp, shape[1]))
+    if name == "head":
+        return P(maybe(fsdp, shape[0]), maybe(tp, shape[1]))
+
+    # attention projections
+    if name == "wq" and d == 3:
+        return P(*L, maybe(fsdp, shape[-3]), maybe(tp, shape[-2]), None)
+    if name in ("wk", "wv") and d == 3 and "attn" in path:
+        return P(*L, maybe(fsdp, shape[-3]), maybe(tp, shape[-2]), None)
+    if name == "wo" and d == 3:
+        return P(*L, maybe(tp, shape[-3]), None, maybe(fsdp, shape[-1]))
+    if name in ("bq", "bk", "bv"):
+        return P(*L, maybe(tp, shape[-2]), None)
+    if name == "u":  # rwkv bonus [H, hd]
+        return P(*L, maybe(tp, shape[-2]), None)
+
+    # MLP / MoE
+    if name in ("w_gate", "w_up", "w_in") and d == 2:
+        return P(*L, maybe(fsdp, shape[-2]), maybe(tp, shape[-1]))
+    if name in ("w_down", "w_out") and d == 2:
+        return P(*L, maybe(tp, shape[-2]), maybe(fsdp, shape[-1]))
+    if name in ("w_gate", "w_up") and d == 3:        # moe [E, D, F]
+        if _div(shape[-3], mesh, tp):                # true expert parallelism
+            return P(*L, tp, maybe(fsdp, shape[-2]), None)
+        if cfg.moe_zero1 and path.startswith("params"):
+            # ZeRO-1: parameters replicated over data; optimizer states (the
+            # opt/m, opt/v mirrors) keep the data-sharded layout below
+            return P(*L, None, None, maybe(tp, shape[-1]))
+        return P(*L, None, maybe(fsdp, shape[-2]), maybe(tp, shape[-1]))
+    if name == "w_down" and d == 3:                  # moe [E, F, D]
+        if _div(shape[-3], mesh, tp):
+            return P(*L, tp, None, maybe(fsdp, shape[-1]))
+        if cfg.moe_zero1 and path.startswith("params"):
+            return P(*L, None, maybe(tp, shape[-2]), None)
+        return P(*L, None, maybe(tp, shape[-2]), maybe(fsdp, shape[-1]))
+    if name == "router":
+        if cfg.moe_zero1 and path.startswith("params"):
+            return P(*L, None, None)     # replicated for the shard_map island
+        return P(*L, maybe(fsdp, shape[-2]), None)
+
+    # rwkv dense [D, D] / lora
+    if name in ("wr", "wk", "wv", "wg") and d == 2:
+        return P(*L, maybe(fsdp, shape[-2]), maybe(tp, shape[-1]))
+    if name == "wo" and d == 2:
+        return P(*L, maybe(tp, shape[-2]), maybe(fsdp, shape[-1]))
+    if name in ("maa_w1", "wd1") and d == 2:
+        return P(*L, maybe(fsdp, shape[-2]), None)
+    if name in ("wd2",) and d == 2:
+        return P(*L, None, maybe(fsdp, shape[-1]))
+
+    # rg-lru block
+    if name in ("w_y", "w_x") and d == 2:
+        return P(*L, maybe(fsdp, shape[-2]), maybe(tp, shape[-1]))
+    if name in ("w_r", "w_i") and d == 2:
+        return P(*L, None, maybe(tp, shape[-1]))
+    if name == "conv_w":
+        return P(*L, None, maybe(tp, shape[-1]))
+    if name in ("conv_b", "lam", "b_r", "b_i"):
+        return P(*L, maybe(tp, shape[-1]))
+
+    # everything else (norms, mus, small vectors): replicated (layer-stacked)
+    return P(*L, *([None] * d))
+
+
+def make_param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape: Any) -> Any:
+    def rule(path, leaf):
+        return NamedSharding(mesh, param_spec(cfg, mesh, _path_str(path),
+                                              leaf.shape))
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+# ---------------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------------
+
+def _batch_axes_for(mesh: Mesh, b: int) -> tuple[str, ...]:
+    """Largest prefix of the batch axes that divides the batch size."""
+    batch, _, _ = _axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in batch])) if batch else 1
+    if batch and b % n == 0:
+        return batch
+    if "data" in batch and b % int(mesh.shape["data"]) == 0:
+        return ("data",)
+    return ()
+
+
+def batch_sharding(mesh: Mesh, batch_shape: Any) -> Any:
+    def rule(leaf):
+        if not leaf.shape:
+            return NamedSharding(mesh, P())
+        axes = _batch_axes_for(mesh, leaf.shape[0])
+        extra = (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(axes if axes else None, *extra))
+
+    return jax.tree.map(rule, batch_shape)
+
+
+def cache_spec_for(cfg: ModelConfig, mesh: Mesh, path: str,
+                   shape: tuple[int, ...]) -> P:
+    """Serving caches: [L, B, ...] — batch over ("pod","data"), heads/width
+    over "model" where divisible."""
+    _, fsdp, tp = _axes(mesh)
+    name = path.rsplit("/", 1)[-1]
+    b = shape[1] if len(shape) >= 2 else 1
+    batch = _batch_axes_for(mesh, b) or None
+
+    def maybe(axis, n):
+        return axis if _div(n, mesh, axis) else None
+
+    kv_div = _div(cfg.n_kv, mesh, tp)
+    if name in ("k", "v", "cross_k", "cross_v"):   # [L, B, W|Sm, K, hd]
+        if kv_div:
+            return P(None, batch, None, tp, None)
+        # kv heads don't divide the model axis: shard the KV sequence instead
+        # (flash-decode style — softmax over the sharded axis psums)
+        return P(None, batch, maybe(tp, shape[-3]), None, None)
+    if name == "abs":                      # [L, W] — must mirror the k/v choice
+        return P(None, None if kv_div else maybe(tp, shape[-1]))
+    if name == "S":                        # rwkv state [L, B, H, hd, hd]
+        return P(None, batch, maybe(tp, shape[-3]), None, None)
+    if name in ("x_prev_tm", "x_prev_cm"):  # [L, B, D]
+        return P(None, batch, None)
+    if name == "h":                        # rg-lru [L, B, R]
+        return P(None, batch, maybe(tp, shape[-1]))
+    if name == "conv":                     # [L, B, K-1, R]
+        return P(None, batch, None, maybe(tp, shape[-1]))
+    # fallback: shard the second axis as batch if it exists
+    extra = (None,) * max(len(shape) - 2, 0)
+    if len(shape) >= 2:
+        return P(None, batch, *extra)
+    return P(*((None,) * len(shape)))
+
+
+def make_cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_shape: Any) -> Any:
+    def rule(path, leaf):
+        return NamedSharding(mesh, cache_spec_for(cfg, mesh, _path_str(path),
+                                                  leaf.shape))
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

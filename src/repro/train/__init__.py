@@ -1,0 +1,6 @@
+from .optim import OptConfig, adamw_update, init_opt_state, lr_at
+from .step import TrainConfig, init_train_state, make_train_step, train_state_specs
+
+__all__ = ["OptConfig", "adamw_update", "init_opt_state", "lr_at",
+           "TrainConfig", "init_train_state", "make_train_step",
+           "train_state_specs"]

@@ -1,0 +1,86 @@
+"""AdamW optimizer + LR schedule + global-norm clipping (no external deps).
+
+Optimizer state mirrors the parameter pytree, so the same partition rules
+shard it (the FSDP/ZeRO property: each data-shard owns its slice of m/v).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(cfg: OptConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = cfg.lr * (step + 1) / max(cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_opt_state(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros_like(p)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(cfg: OptConfig, params: Any, grads: Any, opt_state: dict
+                 ) -> tuple[Any, dict, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = opt_state["step"] + 1
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        new_p = p - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                          + cfg.weight_decay * p)
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m,
+                                                 flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics

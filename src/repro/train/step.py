@@ -1,0 +1,79 @@
+"""Distributed train step: grad accumulation, AdamW, donated state.
+
+``make_train_step`` builds the (state, batch) -> (state, metrics) function the
+launcher jits with in/out shardings from ``repro.sharding``.  Microbatch
+accumulation runs under ``lax.scan`` so the peak activation footprint is one
+microbatch regardless of global batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelApi
+
+from .optim import OptConfig, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    accum_steps: int = 1          # microbatch gradient accumulation
+
+
+def init_train_state(api: ModelApi, key) -> dict:
+    params = api.init(key)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def train_state_specs(api: ModelApi, key=None) -> Any:
+    """Abstract TrainState (ShapeDtypeStructs) without allocating anything."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    return jax.eval_shape(lambda k: init_train_state(api, k), key)
+
+
+def _split_microbatches(batch: dict, accum: int) -> dict:
+    def split(x):
+        b = x.shape[0]
+        assert b % accum == 0, f"batch {b} not divisible by accum {accum}"
+        return x.reshape(accum, b // accum, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(api: ModelApi, tcfg: TrainConfig):
+    def loss_fn(params, mb):
+        loss, aux = api.loss(params, mb)
+        return loss, aux
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: dict, batch: dict):
+        params = state["params"]
+        if tcfg.accum_steps == 1:
+            (loss, aux), grads = grad_fn(params, batch)
+        else:
+            mbs = _split_microbatches(batch, tcfg.accum_steps)
+
+            def body(acc, mb):
+                (l, a), g = grad_fn(params, mb)
+                acc_g, acc_l = acc
+                return (jax.tree.map(jnp.add, acc_g, g), acc_l + l), a
+
+            zero = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params), jnp.float32(0))
+            (grads, loss), aux = jax.lax.scan(body, zero, mbs)
+            grads = jax.tree.map(lambda g: g / tcfg.accum_steps, grads)
+            loss = loss / tcfg.accum_steps
+            aux = jax.tree.map(lambda x: jnp.mean(x, axis=0), aux)
+
+        new_params, new_opt, om = adamw_update(tcfg.opt, params, grads,
+                                               state["opt"])
+        metrics = {"loss": loss, **om}
+        if isinstance(aux, dict):
+            metrics.update({k: v for k, v in aux.items()})
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

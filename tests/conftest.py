@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Tests run on the single real CPU device; ONLY the dry-run uses 512
+# placeholder devices (launch/dryrun.py sets XLA_FLAGS itself, in a
+# subprocess).  Keep this file free of XLA_FLAGS.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,61 @@
+"""FlexTopo graph CRD: Table 2 schema, allocation state, serialization."""
+import pytest
+
+from repro.core.flextopo import ALLOCATED, FAILED, FREE, FlexTopo
+from repro.core.topology import RTX4090_SERVER
+
+
+def test_table2_schema():
+    t = FlexTopo(RTX4090_SERVER, "node-1")
+    g = t.graph
+    kinds = {}
+    for _, _, data in g.edges(data=True):
+        kinds[data["kind"]] = kinds.get(data["kind"], 0) + 1
+    # host: socket-coregroup; contain: cg-core; localized: cg-numa; nearby: gpu-numa
+    assert kinds["host"] == 8
+    assert kinds["contain"] == 64
+    assert kinds["localized"] == 8
+    assert kinds["nearby"] == 8
+    gpu0 = g.nodes[("gpu", 0)]
+    assert gpu0["model"] == "NVIDIA RTX 4090"
+    assert gpu0["memory_capacity_mb"] == 24_000
+    assert gpu0["status"] == FREE and gpu0["used_by"] is None
+
+
+def test_allocate_release_roundtrip():
+    t = FlexTopo(RTX4090_SERVER)
+    t.allocate("pod-a", gpus=[0, 1], coregroups=[0, 1])
+    assert t.gpu_status(0) == ALLOCATED
+    assert t.graph.nodes[("gpu", 0)]["used_by"] == "pod-a"
+    assert t.graph.nodes[("core", 0)]["status"] == ALLOCATED
+    m = t.as_masks()
+    assert m.free_gpu_mask == 0b11111100
+    assert m.free_cg_mask == 0b11111100
+    im = t.instance_masks("pod-a")
+    assert im.free_gpu_mask == 0b11 and im.free_cg_mask == 0b11
+    with pytest.raises(ValueError):
+        t.allocate("pod-b", gpus=[0], coregroups=[])
+    t.release("pod-a")
+    assert t.as_masks().free_gpu_mask == 0xFF
+    assert t.graph.nodes[("core", 0)]["status"] == FREE
+
+
+def test_crd_serialization_roundtrip():
+    t = FlexTopo(RTX4090_SERVER, "node-7")
+    t.allocate("pod-x", gpus=[3], coregroups=[3])
+    crd = t.to_crd()
+    assert crd["kind"] == "FlexTopo"
+    assert crd["status"]["gpus"][3]["usedBy"] == "pod-x"
+    assert crd["status"]["gpus"][3]["numaID"] == 3
+    t2 = FlexTopo.from_crd(crd, RTX4090_SERVER)
+    assert t2.as_masks() == t.as_masks()
+    assert t2.graph.nodes[("core", 24)]["status"] == ALLOCATED
+
+
+def test_gpu_failure_changes_masks():
+    t = FlexTopo(RTX4090_SERVER)
+    t.fail_gpu(5)
+    assert t.gpu_status(5) == FAILED
+    assert t.as_masks().free_gpu_mask == 0xFF & ~(1 << 5)
+    t.repair_gpu(5)
+    assert t.as_masks().free_gpu_mask == 0xFF

@@ -1,0 +1,88 @@
+"""Placement tiers, bundle locality, hit predicate (+ hypothesis invariants)."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.placement import (INFEASIBLE, achieved_tier, best_tier,
+                                  bundle_locality_ok, is_topology_hit,
+                                  min_tier_for, place, place_blind)
+from repro.core.topology import A100_SERVER, RTX4090_SERVER
+
+S4090 = RTX4090_SERVER
+FULL_G = S4090.all_gpu_mask
+FULL_C = S4090.all_cg_mask
+
+
+def test_min_tier():
+    assert min_tier_for(S4090, 1) == 0
+    assert min_tier_for(S4090, 2) == 1      # 1 GPU per NUMA on 4090
+    assert min_tier_for(S4090, 4) == 1
+    assert min_tier_for(S4090, 8) == 2
+    assert min_tier_for(A100_SERVER, 4) == 0  # 4 GPUs per NUMA on A100
+
+
+def test_tiers_on_empty_node():
+    # empty 4090: 1 GPU -> NUMA tier; 4 GPUs -> socket; 8 -> cross
+    assert best_tier(S4090, FULL_G, FULL_C, 1, 1) == 0
+    assert best_tier(S4090, FULL_G, FULL_C, 4, 4) == 1
+    assert best_tier(S4090, FULL_G, FULL_C, 8, 8) == 2
+    assert best_tier(S4090, 0, 0, 1, 1) == INFEASIBLE
+
+
+def test_bundle_locality_blocks_mismatched_free():
+    # free: GPU on NUMA 0, CoreGroup on NUMA 1 — counts fit, bundles don't
+    free_g = 0b1            # gpu 0 (numa 0)
+    free_c = 0b10           # cg 1 (numa 1)
+    assert best_tier(S4090, free_g, free_c, 1, 1, bundle_locality=True) \
+        == INFEASIBLE
+    assert best_tier(S4090, free_g, free_c, 1, 1, bundle_locality=False) == 1
+
+
+def test_place_commits_best_tier():
+    p = place(S4090, FULL_G, FULL_C, 2, 2)
+    assert p is not None and p.tier == 1
+    assert achieved_tier(S4090, p.gpu_mask) == 1
+    assert bundle_locality_ok(S4090, p.gpu_mask, p.cg_mask, 1)
+    assert is_topology_hit(S4090, p.gpu_mask, p.cg_mask, 2, 2)
+
+
+def test_blind_placement_can_miss():
+    # free GPUs 3 and 4 are on different sockets; blind takes lowest indices
+    free_g = 0b00011000
+    free_c = 0b00011000
+    p = place_blind(S4090, free_g, free_c, 2, 2)
+    assert p.tier == 2
+    assert not is_topology_hit(S4090, p.gpu_mask, p.cg_mask, 2, 2)
+
+
+@settings(max_examples=200, deadline=None)
+@given(free_g=st.integers(0, FULL_G), free_c=st.integers(0, FULL_C),
+       g=st.integers(1, 8))
+def test_place_matches_best_tier(free_g, free_c, g):
+    """place() commits exactly the tier best_tier promises, with valid masks."""
+    t = best_tier(S4090, free_g, free_c, g, g)
+    p = place(S4090, free_g, free_c, g, g)
+    if t == INFEASIBLE:
+        assert p is None
+    else:
+        assert p is not None
+        assert p.tier == t
+        # allocated resources were actually free and of the right count
+        assert p.gpu_mask & ~free_g == 0 and p.cg_mask & ~free_c == 0
+        assert p.gpu_mask.bit_count() == g and p.cg_mask.bit_count() == g
+        assert bundle_locality_ok(S4090, p.gpu_mask, p.cg_mask, 1)
+        assert achieved_tier(S4090, p.gpu_mask) <= t
+
+
+@settings(max_examples=200, deadline=None)
+@given(free_g=st.integers(0, A100_SERVER.all_gpu_mask),
+       free_c=st.integers(0, A100_SERVER.all_cg_mask),
+       g=st.integers(1, 8), extra_c=st.integers(0, 2))
+def test_place_matches_best_tier_a100(free_g, free_c, g, extra_c):
+    c = min(g + extra_c, A100_SERVER.num_coregroups)
+    t = best_tier(A100_SERVER, free_g, free_c, g, c)
+    p = place(A100_SERVER, free_g, free_c, g, c)
+    if t == INFEASIBLE:
+        assert p is None
+    else:
+        assert p is not None and p.tier == t
+        assert p.gpu_mask.bit_count() == g and p.cg_mask.bit_count() == c

@@ -1,0 +1,147 @@
+"""End-to-end scheduler behaviour: Fig. 3 scenario, Table 4 hit rates,
+agent event semantics, autoscaler co-location."""
+import pytest
+
+from repro.core import (Cluster, PreemptionResult, RTX4090_SERVER,
+                        TopoScheduler, table1_workloads)
+from repro.core.agent import AgentFleet
+from repro.core.autoscale import AutoscalePolicy, Autoscaler, diurnal_traffic
+from repro.core.simulator import (SimConfig, build_saturated_cluster,
+                                  run_hit_rate_experiment, run_timeline)
+from repro.core.workload import table3_workloads
+
+WL1 = {w.name: w for w in table1_workloads()}
+WL3 = {w.name: w for w in table3_workloads()}
+
+
+def fig3_cluster():
+    """Paper Fig. 3: 3 nodes, 1×A + 6×B + 8×C, fully allocated."""
+    cluster = Cluster(RTX4090_SERVER, 3)
+    sched = TopoScheduler(cluster, engine="imp")
+    sched.schedule(WL1["A"])
+    for _ in range(6):
+        sched.schedule(WL1["B"])
+    for _ in range(8):
+        sched.schedule(WL1["C"])
+    return cluster, sched
+
+
+def test_fig3_saturated():
+    cluster, _ = fig3_cluster()
+    assert cluster.count_by_workload() == {"A": 1, "B": 6, "C": 8}
+    for n in range(3):
+        fg, fc = cluster.free_masks(n)
+        assert fg == 0 and fc == 0
+
+
+def test_fig3_a_scaleup_preempts_topology_aware():
+    """Scaling A (32c/4G) must evict 4 C victims from ONE socket (machine 3
+    holds all C instances) — the paper's central example."""
+    cluster, sched = fig3_cluster()
+    res = sched.preempt(WL1["A"])
+    assert isinstance(res, PreemptionResult)
+    assert len(res.victims) == 4
+    assert res.hit
+    assert res.placement.tier <= 1           # same socket
+    evicted_nodes = {v.node for v in res.evicted}
+    assert evicted_nodes == {res.node}
+
+
+def test_fig3_b_scaleup():
+    cluster, sched = fig3_cluster()
+    res = sched.preempt(WL1["B"])
+    assert isinstance(res, PreemptionResult)
+    assert len(res.victims) == 2
+    assert res.hit and res.placement.tier <= 1
+
+
+def test_hit_rates_table4_small():
+    """FlexTopo-IMP reaches 100% topology-affinity hit; Gödel-standard does
+    not (paper Table 4: 44.5% vs 100%)."""
+    cfg = SimConfig(num_nodes=20, seed=3)
+    godel = run_hit_rate_experiment(cfg, "godel", cycles=2,
+                                    scaleups_per_cycle=10)
+    imp = run_hit_rate_experiment(cfg, "imp", cycles=2, scaleups_per_cycle=10)
+    assert imp.preemptions > 0
+    assert imp.hit_rate == 1.0
+    assert godel.hit_rate < 0.9
+
+
+def test_saturation_is_full():
+    cluster = build_saturated_cluster(SimConfig(num_nodes=10, seed=0))
+    for n in range(10):
+        fg, fc = cluster.free_masks(n)
+        assert fg == 0
+    counts = cluster.count_by_workload()
+    assert counts == {"A": 2, "B": 4, "C": 20, "D": 8}
+
+
+def test_timeline_preemption_shifts_instances():
+    """Fig. 9: scaling B/A up removes offline C/D instances."""
+    tl = run_timeline(SimConfig(num_nodes=10, seed=1), engine="imp",
+                      events=[("B", 3), ("A", 1)])
+    first, last = tl[0], tl[-1]
+    assert last["B"] == first["B"] + 3
+    assert last["A"] == first["A"] + 1
+    assert last.get("C", 0) + last.get("D", 0) < first["C"] + first["D"]
+
+
+def test_agent_event_driven_updates():
+    """§3.3: agents PATCH only on actual allocation change."""
+    cluster = Cluster(RTX4090_SERVER, 2)
+    fleet = AgentFleet(cluster)
+    base = fleet.store.patch_count          # initial sync
+    assert base == 2
+    sched = TopoScheduler(cluster, engine="imp")
+    res = sched.schedule(WL1["C"])
+    assert fleet.notify(res.node) is True   # change -> patch
+    assert fleet.notify(res.node) is False  # no change -> NO patch
+    assert fleet.store.patch_count == base + 1
+    crd = fleet.store.get(f"node-{res.node}")
+    used = [g for g in crd["status"]["gpus"] if g["usedBy"]]
+    assert len(used) == 1
+
+
+def test_agent_periodic_scan_detects_gpu_failure():
+    cluster = Cluster(RTX4090_SERVER, 1)
+    fleet = AgentFleet(cluster)
+    assert fleet.scan_all() == 0            # stable hardware: no reports
+    fleet.inject_gpu_failure(0, gpu=2)
+    assert fleet.scan_all() == 1            # discrepancy -> patch
+    crd = fleet.store.get("node-0")
+    assert crd["status"]["gpus"][2]["status"] == "failed"
+    # scheduler no longer places onto the failed GPU
+    sched = TopoScheduler(cluster, engine="imp")
+    for _ in range(7):
+        res = sched.schedule(WL1["C"])
+        assert res is not None
+        assert not res.placement.gpu_mask >> 2 & 1
+    assert sched.schedule(WL1["C"]) is None  # only the failed GPU remains
+
+
+def test_autoscaler_diurnal_colocation():
+    cluster = Cluster(RTX4090_SERVER, 8)
+    sched = TopoScheduler(cluster, engine="imp")
+    online = WL3["B"]
+    offline = WL3["D"]
+    # start at trough: min replicas + backfill
+    auto = Autoscaler(cluster, sched,
+                      [AutoscalePolicy(online, min_replicas=2,
+                                       max_replicas=12)],
+                      backfill=offline, seed=0)
+    auto.step(hour=2.0)     # valley
+    valley = cluster.count_by_workload()
+    auto.step(hour=14.0)    # peak -> scale up, preempting D
+    peak = cluster.count_by_workload()
+    assert peak["B"] > valley["B"]
+    assert peak.get("D", 0) < valley.get("D", 0)
+    assert diurnal_traffic(14.0) > diurnal_traffic(2.0)
+
+
+def test_hit_rate_jax_batched_engine_matches_python():
+    cfg = SimConfig(num_nodes=10, seed=5)
+    py = run_hit_rate_experiment(cfg, "imp", cycles=1, scaleups_per_cycle=8)
+    bat = run_hit_rate_experiment(cfg, "imp_batched", cycles=1,
+                                  scaleups_per_cycle=8)
+    assert py.preemptions == bat.preemptions
+    assert py.hits == bat.hits

@@ -1,0 +1,106 @@
+"""Prefill/decode equivalence: token-by-token decode must reproduce the
+logits of a fresh prefill over the extended sequence — the strongest
+correctness check of every cache implementation (full KV, ring/SWA KV,
+rwkv matrix state, rg-lru state + conv state, enc-dec cross-KV)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import cache_capacity, get_config
+from repro.models import build_model
+from repro.serving import Request, ServeEngine
+
+DECODE_ARCHS = ["llama3.2-1b", "qwen3-8b", "mixtral-8x7b", "rwkv6-7b",
+                "recurrentgemma-9b", "seamless-m4t-medium", "paligemma-3b"]
+
+
+def _fixed_modality(cfg, B):
+    """Frames/patch embeddings generated ONCE from a dedicated stream (they
+    must be identical between the decode chain and every reference prefill)."""
+    rng = np.random.default_rng(1234)
+    if cfg.is_encdec:
+        return {"frames": jnp.asarray(
+            rng.standard_normal((B, 16, cfg.d_model)), cfg.compute_dtype)}
+    if cfg.frontend == "patch":
+        return {"prefix_embeds": jnp.asarray(
+            rng.standard_normal((B, cfg.frontend_len, cfg.d_model)),
+            cfg.compute_dtype)}
+    return {}
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_matches_prefill(arch):
+    cfg = get_config(arch, smoke=True)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(42)
+    B, S, T = 2, 24, 4
+    toks = rng.integers(1, cfg.vocab, (B, S + T), dtype=np.int32)
+    modality = _fixed_modality(cfg, B)
+    # decode positions are ABSOLUTE sequence positions (patch prefix included)
+    # and the cache must hold prefix + text
+    pos0 = cfg.frontend_len if cfg.frontend == "patch" else 0
+    cap = cache_capacity(cfg, pos0 + S + T)
+
+    prefill = jax.jit(lambda p, b, t: api.prefill(p, b, t),
+                      static_argnums=(2,))
+    logits, caches = prefill(params,
+                             {"tokens": jnp.asarray(toks[:, :S]), **modality},
+                             cap)
+    for t in range(S, S + T):
+        ref_logits, _ = prefill(
+            params, {"tokens": jnp.asarray(toks[:, :t + 1]), **modality}, cap)
+        logits, caches = jax.jit(api.decode_step)(
+            params, caches, jnp.asarray(toks[:, t]), jnp.int32(pos0 + t))
+        a = np.asarray(logits, np.float32)
+        b = np.asarray(ref_logits, np.float32)
+        # bf16 compute: compare loosely
+        np.testing.assert_allclose(a, b, atol=0.08, rtol=0.08,
+                                   err_msg=f"{arch} step {t}")
+
+
+def test_swa_window_limits_receptive_field():
+    """Single-layer SWA: the last token's logits depend ONLY on the final W
+    tokens (with >1 layer the receptive field grows to L*W, so 1 layer is
+    the clean check of the windowed mask + ring cache)."""
+    import dataclasses
+
+    # dense variant: capacity-based MoE couples tokens through expert
+    # overflow ordering, which breaks strict receptive-field equality
+    cfg = dataclasses.replace(get_config("mixtral-8x7b", smoke=True),
+                              n_layers=1, moe=None)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    B, S = 1, 24
+    W = cfg.swa_window                               # 16
+    t1 = rng.integers(1, cfg.vocab, (B, S), dtype=np.int32)
+    t2 = t1.copy()
+    t2[:, : S - W] = rng.integers(1, cfg.vocab, (B, S - W))
+    cap = cache_capacity(cfg, S)
+    prefill = jax.jit(lambda p, b: api.prefill(p, b, cap))
+    l1, _ = prefill(params, {"tokens": jnp.asarray(t1)})
+    l2, _ = prefill(params, {"tokens": jnp.asarray(t2)})
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32), atol=1e-3,
+                               rtol=1e-3)
+
+
+def test_serve_engine_end_to_end():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(api, params, batch_size=2, seq_len=32)
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i, prompt=rng.integers(1, cfg.vocab, 12,
+                                               dtype=np.int32),
+                    max_new_tokens=5) for i in range(5)]
+    done = engine.run(reqs)
+    assert all(r.done for r in done)
+    assert all(len(r.output) == 5 for r in done)
+    assert engine.stats["tokens"] > 0
+    # deterministic greedy decode: same prompt -> same output
+    r_a = Request(rid=10, prompt=done[0].prompt, max_new_tokens=5)
+    engine.run([r_a])
+    assert r_a.output == done[0].output

@@ -1,0 +1,58 @@
+"""ServerSpec invariants + the paper's Fig. 2 cost matrix."""
+import numpy as np
+import pytest
+
+from repro.core.topology import A100_SERVER, RTX4090_SERVER, SPECS, ServerSpec
+
+
+def test_fig2_4090_costs():
+    s = RTX4090_SERVER
+    assert s.comm_cost(0, 0) == 10          # intra-NUMA
+    assert s.comm_cost(0, 1) == 12          # cross-NUMA same socket (1.2x)
+    assert s.comm_cost(0, 4) == 32          # cross-socket (3.2x)
+
+
+def test_fig2_a100_costs():
+    s = A100_SERVER
+    assert s.comm_cost(0, 0) == 10
+    assert s.comm_cost(0, 1) == 20          # 2x — one NUMA per socket
+
+
+def test_4090_layout():
+    s = RTX4090_SERVER
+    assert s.num_coregroups == 8
+    assert [s.numa_of_gpu(g) for g in range(8)] == list(range(8))
+    assert [s.socket_of_gpu(g) for g in range(8)] == [0] * 4 + [1] * 4
+    # paper §2.2: cores 24-31 are NUMA 3, nearest GPU 3
+    assert s.numa_of_core(24) == 3 and s.numa_of_core(31) == 3
+
+
+def test_a100_layout():
+    s = A100_SERVER
+    assert s.num_coregroups == 16
+    assert [s.numa_of_gpu(g) for g in range(8)] == [0] * 4 + [1] * 4
+
+
+@pytest.mark.parametrize("spec", list(SPECS.values()), ids=lambda s: s.name)
+def test_masks_partition(spec: ServerSpec):
+    # NUMA masks partition the full GPU/CG masks exactly
+    assert int(np.bitwise_or.reduce(spec.numa_gpu_masks)) == spec.all_gpu_mask
+    assert int(np.bitwise_or.reduce(spec.numa_cg_masks)) == spec.all_cg_mask
+    for u in range(spec.num_numa):
+        for w in range(u + 1, spec.num_numa):
+            assert int(spec.numa_gpu_masks[u]) & int(spec.numa_gpu_masks[w]) == 0
+            assert int(spec.numa_cg_masks[u]) & int(spec.numa_cg_masks[w]) == 0
+    # socket masks aggregate their NUMA masks
+    for s in range(spec.num_sockets):
+        agg = 0
+        for u in range(spec.num_numa):
+            if spec.socket_of_numa(u) == s:
+                agg |= int(spec.numa_gpu_masks[u])
+        assert agg == int(spec.socket_gpu_masks[s])
+
+
+def test_invalid_specs_rejected():
+    with pytest.raises(ValueError):
+        ServerSpec("bad", 2, 3, 64, 8, 8)   # 3 NUMA across 2 sockets
+    with pytest.raises(ValueError):
+        ServerSpec("bad", 2, 8, 63, 8, 8)   # cores not divisible
