@@ -10,8 +10,12 @@ independent preemptions.  Iterations:
        per-node dispatch overhead dominates at m<=8]
   it3  cluster-batched sweep: ONE vmapped evaluation per subset size over all
        candidate nodes (imp_batched)
+  it4  plan_batch: 8 pending preemptors planned against one snapshot through
+       the batched engine (per-request amortized latency)
 
-Each records P50/P90 sourcing latency + end-to-end preempt() latency.
+Independent samples are rollback-free: each is a pure ``plan()`` read
+against the saturated state — no mutate-then-undo.  Each iteration records
+P50/P90 sourcing latency + end-to-end plan() latency.
 """
 from __future__ import annotations
 
@@ -20,43 +24,45 @@ import time
 import numpy as np
 
 from repro.core.scheduler import TopoScheduler
-from repro.core.simulator import SimConfig, build_saturated_cluster
+from repro.core.simulator import SimConfig
 from repro.core.workload import table3_workloads
 
 from .common import FULL, emit
 
 
-def _measure(engine: str, node_index: bool, nodes: int = 100,
-             samples: int = 30, preemptor: str = "B") -> dict:
+def _saturated(nodes: int, node_index: bool = True, seed: int = 11):
+    """The shared measurement fixture: one saturated Table 3 cluster."""
+    import random
+
     import repro.core.simulator as sim
     from repro.core.cluster import Cluster
 
-    cfg = SimConfig(num_nodes=nodes, seed=11)
-    wls = {w.name: w for w in table3_workloads()}
+    cfg = SimConfig(num_nodes=nodes, seed=seed)
     cluster = Cluster(cfg.spec, cfg.num_nodes, node_index=node_index)
-    import random
-
     sim.saturate(cluster, table3_workloads(),
                  {k: round(v * nodes / 100) for k, v in
                   sim.TABLE3_INITIAL_INSTANCES.items()},
                  random.Random(cfg.seed))
+    return cluster
+
+
+def _measure(engine: str, node_index: bool, nodes: int = 100,
+             samples: int = 30, preemptor: str = "B") -> dict:
+    wls = {w.name: w for w in table3_workloads()}
+    cluster = _saturated(nodes, node_index=node_index)
     sched = TopoScheduler(cluster, engine=engine)
     sourcing, total = [], []
     # warm up jit caches so compile time isn't counted as scheduling latency
-    res = sched.schedule_or_preempt(wls[preemptor])
-    if res is not None:
-        sched.undo(res)
-        if hasattr(res, "sourcing_us"):
-            sched.sourcing_us_log.clear()
+    sched.plan(wls[preemptor])
+    sched.sourcing_us_log.clear()
     for _ in range(samples):
         t0 = time.perf_counter()
-        res = sched.schedule_or_preempt(wls[preemptor])
+        dec = sched.plan(wls[preemptor]).decision   # rollback-free read
         total.append((time.perf_counter() - t0) * 1e6)
-        if res is None:
+        if dec.rejected:
             break
-        if hasattr(res, "sourcing_us"):
-            sourcing.append(res.sourcing_us)
-        sched.undo(res)
+        if dec.preempted:
+            sourcing.append(dec.sourcing_us)
     return {
         "engine": engine, "node_index": node_index,
         "sourcing_p50": float(np.percentile(sourcing, 50)) if sourcing else 0,
@@ -64,6 +70,35 @@ def _measure(engine: str, node_index: bool, nodes: int = 100,
         "total_p50": float(np.percentile(total, 50)),
         "total_p90": float(np.percentile(total, 90)),
         "n": len(sourcing),
+    }
+
+
+def _measure_plan_batch(engine: str, nodes: int = 100, batch: int = 8,
+                        rounds: int = 4, preemptor: str = "B") -> dict:
+    """it4: amortized per-request planning latency of one batched plan.
+
+    Reports END-TO-END plan time per request (total_*); the sourcing_*
+    fields stay zero because a batched plan interleaves filtering,
+    sourcing, and selection per request — a per-phase split would not be
+    comparable with it0-it3's sourcing numbers.
+    """
+    wls = {w.name: w for w in table3_workloads()}
+    cluster = _saturated(nodes)
+    sched = TopoScheduler(cluster, engine=engine)
+    sched.plan_batch([wls[preemptor]] * batch)      # jit warm-up
+    per_req = []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        txns = sched.plan_batch([wls[preemptor]] * batch)
+        per_req.append((time.perf_counter() - t0) * 1e6 / batch)
+        assert all(t.decision for t in txns)
+    return {
+        "engine": engine, "node_index": True,
+        "sourcing_p50": 0.0,
+        "sourcing_p90": 0.0,
+        "total_p50": float(np.percentile(per_req, 50)),
+        "total_p90": float(np.percentile(per_req, 90)),
+        "n": len(per_req) * batch,
     }
 
 
@@ -87,6 +122,12 @@ def run(full: bool = FULL) -> list[dict]:
              f"sourcing_p90={r['sourcing_p90']:.0f}us "
              f"total_p50={r['total_p50']:.0f}us "
              f"total_p90={r['total_p90']:.0f}us n={r['n']}")
+    r = _measure_plan_batch("imp_batched", nodes=nodes,
+                            batch=8 if full else 4)
+    r["iteration"] = "it4_plan_batch"
+    rows.append(r)
+    emit("perf_sched_it4_plan_batch", r["total_p50"],
+         f"end_to_end_per_request_p90={r['total_p90']:.0f}us n={r['n']}")
     return rows
 
 

@@ -26,11 +26,9 @@ def run(full: bool = FULL) -> list[dict]:
         times = []
         for _ in range(5):
             t0 = time.perf_counter()
-            res = sched.preempt(wls[name])
+            sched.plan(wls[name], allow_normal=False)   # rollback-free read
             dt = (time.perf_counter() - t0) * 1e6
             times.append(dt)
-            if res is not None:
-                sched.undo(res)
         mean = sum(times) / len(times)
         rows.append({"workload": name, "mean_us": mean, "times_us": times})
         emit(f"fig10_sourcing_{name}", mean,

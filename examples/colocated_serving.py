@@ -22,14 +22,11 @@ sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 import jax
 import numpy as np
 
-from repro.core import Cluster, PreemptionResult, RTX4090_SERVER, TopoScheduler
+from repro.core import Cluster, RTX4090_SERVER, TopoScheduler
 from repro.core.workload import TopoPolicy, WorkloadSpec
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serving import Request, ServeEngine
-
-# Fig. 2: relative comm cost per tier -> scheduled-performance multiplier
-TIER_PERF = {0: 1.0, 1: 10 / 12, 2: 10 / 32}
+from repro.serving import Request, ServeEngine, scheduled_factor
 
 
 def main() -> None:
@@ -48,7 +45,7 @@ def main() -> None:
     # saturation allocation: 2 chat instances + offline fills the rest
     for _ in range(2):
         sched.schedule(online)
-    while sched.schedule(offline) is not None:
+    while sched.schedule(offline):
         pass
     print("saturated:", cluster.count_by_workload())
 
@@ -57,21 +54,20 @@ def main() -> None:
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
 
-    # traffic spike: scale the chat service +2 via topology-aware preemption
-    placements = []
-    for _ in range(2):
-        res = sched.schedule_or_preempt(online)
-        assert res is not None
-        kind = "preempted" if isinstance(res, PreemptionResult) else "placed"
-        victims = getattr(res, "victims", ())
-        print(f"scale-up: {kind} on node {res.node} tier="
-              f"{res.placement.tier} hit={res.hit} victims={victims}")
-        placements.append(res)
+    # traffic spike: plan the +2 chat scale-up as one batch against a single
+    # snapshot (HyGen-style batched admission), then commit both decisions
+    decisions = []
+    for txn in sched.plan_batch([online, online]):
+        dec = txn.commit()
+        assert not dec.rejected
+        print(f"scale-up: {dec.kind} on node {dec.node} tier="
+              f"{dec.placement.tier} hit={dec.hit} victims={dec.victims}")
+        decisions.append(dec)
 
     # each placed instance serves a batch of requests
     rng = np.random.default_rng(0)
     total_tps = 0.0
-    for res in placements:
+    for dec in decisions:
         engine = ServeEngine(api, params, batch_size=2, seq_len=32)
         reqs = [Request(rid=i,
                         prompt=rng.integers(1, cfg.vocab, 12, dtype=np.int32),
@@ -80,10 +76,10 @@ def main() -> None:
         engine.run(reqs)
         dt = time.perf_counter() - t0
         raw_tps = engine.stats["tokens"] / dt
-        factor = TIER_PERF[res.placement.tier]
+        factor = scheduled_factor(dec)
         total_tps += raw_tps * factor
-        print(f"instance on node {res.node}: {raw_tps:6.1f} tok/s raw x "
-              f"{factor:.2f} (tier {res.placement.tier}) = "
+        print(f"instance on node {dec.node}: {raw_tps:6.1f} tok/s raw x "
+              f"{factor:.2f} (tier {dec.placement.tier}) = "
               f"{raw_tps * factor:6.1f} tok/s scheduled")
     print(f"\nscheduled throughput of the scale-up: {total_tps:.1f} tok/s")
     print("final cluster:", cluster.count_by_workload())

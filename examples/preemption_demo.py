@@ -2,7 +2,17 @@
 co-located at saturation, then a topology-aware scale-up of A.
 
 Shows the exact failure mode of priority-only preemption (victims freed on
-the wrong socket) and how FlexTopo+IMP fixes it.
+the wrong socket) and how FlexTopo+IMP fixes it — plus the transactional
+scheduler API:
+
+* ``sched.plan(wl)`` evaluates Filtering → Sorting → Bind against a
+  copy-on-write view and returns a ``Transaction``; the cluster is untouched
+  until ``txn.commit()``, and ``txn.rollback()`` restores the exact prior
+  state (original victim uids and placements) after a commit.
+* ``sched.plan_batch([wl, ...])`` plans several scale-ups against ONE
+  snapshot so the decisions compose before anything is committed.
+* ``@register_engine("name")`` plugs a custom victim-sourcing engine into
+  the registry, making it a valid ``TopoScheduler(engine="name")`` choice.
 
   PYTHONPATH=src python examples/preemption_demo.py
 """
@@ -11,7 +21,9 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
-from repro.core import Cluster, RTX4090_SERVER, TopoScheduler, table1_workloads
+from repro.core import (Cluster, RTX4090_SERVER, TopoScheduler,
+                        register_engine, registered_engines, table1_workloads)
+from repro.core.preemption import flextopo_imp
 
 
 def gpu_map(cluster, node):
@@ -30,28 +42,63 @@ def show(cluster, title):
         print(f"machine {n + 1}: {gpu_map(cluster, n)}")
 
 
-def main() -> None:
+def saturated(engine):
     wls = {w.name: w for w in table1_workloads()}
+    cluster = Cluster(RTX4090_SERVER, 3)
+    sched = TopoScheduler(cluster, engine=engine)
+    sched.schedule(wls["A"])
+    for _ in range(6):
+        sched.schedule(wls["B"])
+    for _ in range(8):
+        sched.schedule(wls["C"])
+    return cluster, sched, wls
 
+
+# A custom engine is one decorated sourcing function: here, plain IMP
+# restricted to even node INDICES — machines 1 and 3, say a maintenance
+# policy that fences off the rest.
+@register_engine("imp_even_nodes")
+def imp_even_nodes(cluster, workload, node):
+    return flextopo_imp(cluster, workload, node) if node % 2 == 0 else []
+
+
+def main() -> None:
     for engine in ("godel", "imp"):
-        cluster = Cluster(RTX4090_SERVER, 3)
-        sched = TopoScheduler(cluster, engine=engine)
-        sched.schedule(wls["A"])
-        for _ in range(6):
-            sched.schedule(wls["B"])
-        for _ in range(8):
-            sched.schedule(wls["C"])
+        cluster, sched, wls = saturated(engine)
         show(cluster, f"saturated cluster (engine={engine})")
 
-        res = sched.preempt(wls["A"])
-        print(f"\nscale-up A with engine={engine}:")
-        print(f"  chose machine {res.node + 1}, evicted "
-              f"{[v.name for v in res.evicted]}")
-        print(f"  placement tier={res.placement.tier} "
-              f"({['NUMA', 'socket', 'cross-socket'][res.placement.tier]}) "
-              f"topology hit={res.hit}")
+        # two-phase: plan (pure read) ... then commit
+        txn = sched.plan(wls["A"])
+        dec = txn.decision
+        print(f"\nscale-up A with engine={engine}: planned "
+              f"{dec.kind} on machine {dec.node + 1}, victims={dec.victims}")
+        txn.commit()
+        print(f"  committed: evicted {[v.name for v in dec.evicted]}")
+        print(f"  placement tier={dec.placement.tier} "
+              f"({['NUMA', 'socket', 'cross-socket'][dec.placement.tier]}) "
+              f"topology hit={dec.hit}")
         show(cluster, f"after preemption (engine={engine})")
+
+        # rollback restores the exact pre-commit state (same victim uids)
+        txn.rollback()
+        show(cluster, f"after rollback (engine={engine})")
         print("-" * 70)
+
+    # batched admission: plan 3 scale-ups against one snapshot, commit together
+    cluster, sched, wls = saturated("imp")
+    txns = sched.plan_batch([wls["B"], wls["B"], wls["A"]])
+    print("\nplan_batch against one snapshot:",
+          [(t.decision.kind, t.decision.node + 1) for t in txns])
+    for t in txns:
+        t.commit()
+    show(cluster, "after committing the batch")
+
+    # the registry knows every engine, including custom ones
+    print("\nregistered engines:", ", ".join(registered_engines()))
+    cluster, sched, wls = saturated("imp_even_nodes")
+    dec = sched.preempt(wls["B"])
+    print(f"custom engine chose machine {dec.node + 1} "
+          f"(even node indices only), hit={dec.hit}")
 
 
 if __name__ == "__main__":

@@ -1,19 +1,24 @@
 """Core: the paper's contribution — FlexTopo + topology-aware preemption."""
-from .cluster import Cluster, ClusterArrays
+from .cluster import Cluster, ClusterArrays, ClusterView
+from .decisions import SchedulingDecision, Transaction, TransactionError
+from .engines import (EngineName, SourcingEngine, UnknownEngineError,
+                      get_engine, register_engine, registered_engines)
 from .flextopo import FlexTopo, FlexTopoMasks
 from .placement import (INFEASIBLE, Placement, achieved_tier, best_tier,
                         is_topology_hit, min_tier_for, place, place_blind)
-from .scheduler import PreemptionResult, ScheduleResult, TopoScheduler
+from .scheduler import TopoScheduler
 from .scoring import Candidate, score, select_best
 from .topology import A100_SERVER, RTX4090_SERVER, SPECS, TPU_V5E_HOST, ServerSpec
 from .workload import (Instance, TopoPolicy, WorkloadSpec, table1_workloads,
                        table3_workloads)
 
 __all__ = [
-    "Cluster", "ClusterArrays", "FlexTopo", "FlexTopoMasks", "INFEASIBLE",
-    "Placement", "achieved_tier", "best_tier", "is_topology_hit",
-    "min_tier_for", "place", "place_blind", "PreemptionResult",
-    "ScheduleResult", "TopoScheduler", "Candidate", "score", "select_best",
+    "Cluster", "ClusterArrays", "ClusterView", "FlexTopo", "FlexTopoMasks",
+    "INFEASIBLE", "Placement", "achieved_tier", "best_tier", "is_topology_hit",
+    "min_tier_for", "place", "place_blind", "SchedulingDecision",
+    "Transaction", "TransactionError", "EngineName", "SourcingEngine",
+    "UnknownEngineError", "get_engine", "register_engine",
+    "registered_engines", "TopoScheduler", "Candidate", "score", "select_best",
     "A100_SERVER", "RTX4090_SERVER", "SPECS", "TPU_V5E_HOST", "ServerSpec",
     "Instance", "TopoPolicy", "WorkloadSpec", "table1_workloads",
     "table3_workloads",

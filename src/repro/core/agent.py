@@ -91,6 +91,25 @@ class AgentFleet:
     def notify(self, node: int) -> bool:
         return self.agents[node].on_allocation_event()
 
+    def watch(self, scheduler) -> None:
+        """Subscribe to a TopoScheduler's transaction commits/rollbacks."""
+        scheduler.add_listener(self.on_decision)
+
+    def on_decision(self, decision, event: str | None = None) -> int:
+        """Allocation event from a committed (or rolled-back) transaction:
+        sync every node the decision touched.  Returns #patches issued."""
+        nodes = set()
+        if decision.node >= 0:
+            nodes.add(decision.node)
+        nodes.update(v.node for v in decision.evicted)
+        # on rollback, `evicted` has been cleared — the victims' nodes are
+        # recoverable from the live registry via the victim uids
+        for uid in decision.victims:
+            inst = self.cluster.instances.get(uid)
+            if inst is not None:
+                nodes.add(inst.node)
+        return sum(self.notify(n) for n in sorted(nodes))
+
     def scan_all(self) -> int:
         return sum(a.periodic_hardware_scan() for a in self.agents)
 

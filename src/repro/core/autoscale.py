@@ -13,7 +13,7 @@ import math
 import random
 
 from .cluster import Cluster
-from .scheduler import PreemptionResult, TopoScheduler
+from .scheduler import TopoScheduler
 from .workload import WorkloadSpec
 
 
@@ -70,13 +70,16 @@ class Autoscaler:
             delta = want - len(current)
             preemptions = hits = failures = 0
             if delta > 0:
-                for _ in range(delta):
-                    res = self.scheduler.schedule_or_preempt(pol.workload)
-                    if res is None:
+                # batched admission: plan the whole scale-up against one
+                # snapshot, then commit the feasible transactions in order
+                for txn in self.scheduler.plan_batch(
+                        [pol.workload] * delta):
+                    dec = txn.commit()
+                    if dec.rejected:
                         failures += 1
-                    elif isinstance(res, PreemptionResult):
+                    elif dec.preempted:
                         preemptions += 1
-                        hits += int(res.hit)
+                        hits += int(dec.hit)
                 action = "scale_up"
             elif delta < 0:
                 for uid in self.rng.sample(current, -delta):
@@ -91,7 +94,7 @@ class Autoscaler:
         # co-location: offline work continuously pads whatever is free
         # (valleys between online peaks — paper §1 saturation allocation)
         if self.backfill is not None:
-            while self.scheduler.schedule(self.backfill) is not None:
+            while self.scheduler.schedule(self.backfill):
                 pass
         return out
 

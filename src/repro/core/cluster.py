@@ -63,6 +63,23 @@ class Cluster:
         self._mask_cache[inst.node] = None
         return inst
 
+    def restore(self, inst: Instance) -> Instance:
+        """Re-insert a previously evicted instance with full fidelity.
+
+        Unlike ``bind``, the instance keeps its original uid, node, and
+        GPU/CoreGroup masks — this is what ``Transaction.rollback`` uses so
+        that reversing a preemption is bitwise-exact.
+        """
+        if inst.uid in self.instances:
+            raise ValueError(f"uid {inst.uid} already bound")
+        gpus = [g for g in range(self.spec.num_gpus) if inst.gpu_mask >> g & 1]
+        cgs = [c for c in range(self.spec.num_coregroups) if inst.cg_mask >> c & 1]
+        self.topos[inst.node].allocate(inst.name, gpus, cgs)
+        self.instances[inst.uid] = inst
+        self._by_node[inst.node].add(inst.uid)
+        self._mask_cache[inst.node] = None
+        return inst
+
     def invalidate_node(self, node: int) -> None:
         self._mask_cache[node] = None
 
@@ -131,6 +148,10 @@ class Cluster:
             })
         return rows
 
+    def view(self) -> "ClusterView":
+        """Copy-on-write planning view over the current state."""
+        return ClusterView(self)
+
     def cross_socket_instances(self) -> int:
         """Fig. 8 headline number: instances whose GPUs span sockets."""
         from .placement import achieved_tier, min_tier_for
@@ -142,3 +163,79 @@ class Cluster:
             and achieved_tier(self.spec, inst.gpu_mask)
             > min_tier_for(self.spec, inst.gpu_mask.bit_count())
         )
+
+
+class ClusterView:
+    """Copy-on-write overlay over a `Cluster` for transactional planning.
+
+    Presents the same read interface the sourcing engines and the scheduler
+    use (``spec``, ``num_nodes``, ``free_masks``, ``instances_on``,
+    ``victims_on``) but records evictions and binds locally instead of
+    mutating the base cluster.  Planned binds get *virtual* (negative) uids
+    so they can never collide with live instances; ``Transaction.commit``
+    later replays the plan onto the base cluster for real.
+
+    One view can host several ``plan()`` calls (``plan_batch``): later plans
+    see earlier planned evictions/binds, so a batch of decisions composes
+    against a single snapshot.
+    """
+
+    def __init__(self, base: Cluster) -> None:
+        self.base = base
+        self.spec = base.spec
+        self.num_nodes = base.num_nodes
+        self._evicted: dict[int, Instance] = {}
+        self._added: dict[int, Instance] = {}
+        self._uid = itertools.count(-1, -1)
+        # virtual uid -> real uid, filled as the view's transactions commit so
+        # later transactions can resolve victims planned against earlier binds
+        self.committed_uids: dict[int, int] = {}
+
+    # -- read interface (mirrors Cluster) ------------------------------------------
+    def free_masks(self, node: int) -> tuple[int, int]:
+        fg, fc = self.base.free_masks(node)
+        for inst in self._evicted.values():
+            if inst.node == node:
+                fg |= inst.gpu_mask
+                fc |= inst.cg_mask
+        for inst in self._added.values():
+            if inst.node == node:
+                fg &= ~inst.gpu_mask
+                fc &= ~inst.cg_mask
+        return fg, fc
+
+    def instances_on(self, node: int) -> list[Instance]:
+        live = [i for i in self.base.instances_on(node)
+                if i.uid not in self._evicted]
+        live.extend(i for i in self._added.values() if i.node == node)
+        return live
+
+    def victims_on(self, node: int, preemptor_priority: int) -> list[Instance]:
+        return sorted(
+            (
+                i for i in self.instances_on(node)
+                if i.preemptible and i.priority < preemptor_priority
+            ),
+            key=lambda i: (i.priority, i.uid),
+        )
+
+    # -- planned mutations ----------------------------------------------------------
+    def plan_evict(self, uid: int) -> Instance:
+        if uid in self._added:
+            return self._added.pop(uid)
+        inst = self.base.instances[uid]
+        if uid in self._evicted:
+            raise ValueError(f"uid {uid} already planned for eviction")
+        self._evicted[uid] = inst
+        return inst
+
+    def plan_bind(self, workload: WorkloadSpec, node: int,
+                  placement: Placement) -> Instance:
+        inst = Instance(uid=next(self._uid), workload=workload, node=node,
+                        gpu_mask=placement.gpu_mask, cg_mask=placement.cg_mask)
+        self._added[inst.uid] = inst
+        return inst
+
+    def resolve_uid(self, uid: int) -> int:
+        """Map a virtual (planned-bind) uid to the real uid it committed as."""
+        return self.committed_uids.get(uid, uid)

@@ -23,6 +23,7 @@ import itertools
 from typing import Iterable, Sequence
 
 from .cluster import Cluster
+from .engines import register_engine
 from .placement import INFEASIBLE, best_tier
 from .scoring import Candidate
 from .workload import Instance, TopoPolicy, WorkloadSpec
@@ -81,6 +82,20 @@ def godel_standard(cluster: Cluster, workload: WorkloadSpec, node: int
     )
 
 
+def _godel_select(candidates: list[Candidate], alpha: float) -> Candidate | None:
+    """Standard policy: minimize evicted priority, then victim count."""
+    if not candidates:
+        return None
+    return min(candidates, key=lambda c: (c.priority_sum, len(c.victims), c.node))
+
+
+@register_engine("godel", topology_aware=False, selector=_godel_select)
+def godel_source(cluster: Cluster, workload: WorkloadSpec, node: int
+                 ) -> list[Candidate]:
+    c = godel_standard(cluster, workload, node)
+    return [c] if c is not None else []
+
+
 # ---------------------------------------------------------------------------------
 # FlexTopo engines
 # ---------------------------------------------------------------------------------
@@ -106,6 +121,7 @@ def _evaluate_combos(
     return out
 
 
+@register_engine("exhaustive")
 def flextopo_exhaustive(cluster: Cluster, workload: WorkloadSpec, node: int
                         ) -> list[Candidate]:
     """All 2^m - 1 non-empty victim subsets (+ the empty set if it already fits)."""
@@ -138,6 +154,7 @@ def min_feasible_k(cluster: Cluster, workload: WorkloadSpec, node: int,
     return max(kg, kc)
 
 
+@register_engine("imp")
 def flextopo_imp(cluster: Cluster, workload: WorkloadSpec, node: int
                  ) -> list[Candidate]:
     """Algorithm 2: smallest-subset-first with early stop (+ counting

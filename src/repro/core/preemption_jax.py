@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .cluster import Cluster
+from .engines import register_engine
 from .scoring import Candidate
 from .topology import ServerSpec
 from .workload import TopoPolicy, WorkloadSpec
@@ -185,6 +186,7 @@ def cluster_victim_arrays(
     return free_gpu, free_cg, vg, vc, vp, valid, per_node
 
 
+@register_engine("imp_batched", batched=True)
 def source_candidates_batched(
     cluster: Cluster, workload: WorkloadSpec, nodes: list[int],
 ) -> list[Candidate]:
@@ -252,6 +254,7 @@ def _victim_arrays(cluster: Cluster, workload: WorkloadSpec, node: int):
     return victims, vg, vc, vp
 
 
+@register_engine("imp_jax")
 def flextopo_imp_vectorized(cluster: Cluster, workload: WorkloadSpec, node: int
                             ) -> list[Candidate]:
     """IMP with the inner subset sweep vectorized (same results as python IMP)."""

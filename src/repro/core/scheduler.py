@@ -1,4 +1,4 @@
-"""Topology-aware scheduler (paper §3.1, Algorithm 1).
+"""Topology-aware scheduler (paper §3.1, Algorithm 1) — transactional API.
 
 Pipeline per scheduling attempt:
 
@@ -9,49 +9,45 @@ Pipeline per scheduling attempt:
    * *Guaranteed Filtering* — keep candidate nodes that could satisfy the
      preemptor's topology policy if ALL their victims were drained.
    * *Best-effort Sorting* — per node, source victim-set candidates with the
-     configured engine (godel | exhaustive | imp | imp_jax | imp_pallas), then
-     select the global argmax of Eq. 1/Eq. 2.
+     configured engine ({engines}), then select the global argmax of
+     Eq. 1/Eq. 2.
    * *Bind* — evict the victims and place the preemptor.
+
+The engine list above is rendered from the live registry
+(``repro.core.engines.registered_engines``); custom engines registered with
+``@register_engine("name")`` become valid ``engine=`` arguments automatically.
+
+Transactional protocol
+----------------------
+``plan(workload)`` runs Filtering → Sorting against a copy-on-write
+`ClusterView` and returns a `Transaction` holding a unified
+`SchedulingDecision` (kind ∈ placed | preempted | rejected).  Nothing is
+mutated until ``txn.commit()``; dropping or ``rollback()``-ing a planned
+transaction is free, which makes the Table 4 "independent preemptions"
+protocol a pure read.  ``plan_batch([...])`` plans several pending
+preemptors against one shared view so the decisions compose; cluster-wide
+engines (``imp_batched``) evaluate each request's surviving nodes in a
+single vmapped sweep.  ``schedule`` / ``preempt`` / ``schedule_or_preempt``
+are plan-and-commit conveniences, and ``undo(decision)`` delegates to
+``Transaction.rollback()``.
 
 Latency accounting mirrors the paper's overhead analysis: we time the
 candidate-sourcing phase ("the primary contributor to time overhead").
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from typing import Callable, Literal
+from typing import Callable, Iterable
 
-from . import preemption, preemption_jax
-from .cluster import Cluster
+from . import preemption, preemption_jax  # noqa: F401  (self-register engines)
+from .cluster import Cluster, ClusterView
+from .decisions import SchedulingDecision, Transaction
+from .engines import (EngineName, SourcingEngine, get_engine,
+                      registered_engines)
 from .placement import (INFEASIBLE, Placement, best_tier, is_topology_hit,
                         place, place_blind)
-from .scoring import DEFAULT_ALPHA, Candidate, select_best
-from .workload import Instance, TopoPolicy, WorkloadSpec
-
-EngineName = Literal[
-    "godel", "exhaustive", "imp", "imp_jax", "imp_batched", "imp_pallas"
-]
-
-
-@dataclasses.dataclass
-class PreemptionResult:
-    instance: Instance
-    node: int
-    victims: tuple[int, ...]
-    placement: Placement
-    hit: bool
-    sourcing_us: float
-    num_candidates: int
-    evicted: list[Instance] = dataclasses.field(default_factory=list)
-
-
-@dataclasses.dataclass
-class ScheduleResult:
-    instance: Instance
-    node: int
-    placement: Placement
-    hit: bool
+from .scoring import DEFAULT_ALPHA, Candidate
+from .workload import TopoPolicy, WorkloadSpec
 
 
 class TopoScheduler:
@@ -64,6 +60,7 @@ class TopoScheduler:
     ) -> None:
         self.cluster = cluster
         self.engine: EngineName = engine
+        self._engine: SourcingEngine = get_engine(engine)
         self.alpha = alpha
         # Local (node-internal) allocation is kubelet-style topology-aware for
         # ALL engines — the paper's baseline miss comes from topology-blind
@@ -74,6 +71,16 @@ class TopoScheduler:
             True if topology_aware_placement is None else topology_aware_placement
         )
         self.sourcing_us_log: list[float] = []
+        self.listeners: list[Callable[[SchedulingDecision, str], None]] = []
+
+    # ---- commit/rollback observers ------------------------------------------------
+    def add_listener(self, fn: Callable[[SchedulingDecision, str], None]) -> None:
+        """Subscribe to committed/rolled-back decisions (e.g. the agent fleet)."""
+        self.listeners.append(fn)
+
+    def _notify(self, decision: SchedulingDecision, event: str) -> None:
+        for fn in self.listeners:
+            fn(decision, event)
 
     # ---- request helpers -------------------------------------------------------
     def _request(self, workload: WorkloadSpec) -> tuple[int, int, bool]:
@@ -84,9 +91,10 @@ class TopoScheduler:
             workload.numa_policy == TopoPolicy.GUARANTEED,
         )
 
-    def _place_on(self, workload: WorkloadSpec, node: int) -> Placement | None:
+    def _place_on(self, workload: WorkloadSpec, node: int,
+                  view: ClusterView) -> Placement | None:
         spec = self.cluster.spec
-        free_gpu, free_cg = self.cluster.free_masks(node)
+        free_gpu, free_cg = view.free_masks(node)
         need_gpus, need_cgs, bundle = self._request(workload)
         if self.topology_aware:
             p = place(spec, free_gpu, free_cg, need_gpus, need_cgs, bundle)
@@ -100,18 +108,24 @@ class TopoScheduler:
             return place_blind(spec, free_gpu, free_cg, need_gpus, need_cgs)
         return place_blind(spec, free_gpu, free_cg, need_gpus, need_cgs)
 
-    # ---- normal scheduling cycle --------------------------------------------------
-    def schedule(self, workload: WorkloadSpec) -> ScheduleResult | None:
+    def _hit(self, workload: WorkloadSpec, placement: Placement) -> bool:
+        need_gpus, need_cgs, bundle = self._request(workload)
+        return is_topology_hit(self.cluster.spec, placement.gpu_mask,
+                               placement.cg_mask, need_gpus, need_cgs, bundle)
+
+    # ---- planning: normal scheduling cycle ----------------------------------------
+    def _plan_normal(self, workload: WorkloadSpec,
+                     view: ClusterView) -> tuple[int, Placement] | None:
         best: tuple[tuple, int, Placement] | None = None
-        for node in range(self.cluster.num_nodes):
-            p = self._place_on(workload, node)
+        for node in range(view.num_nodes):
+            p = self._place_on(workload, node, view)
             if p is None:
                 continue
-            if self.engine == "godel":
+            if not self._engine.topology_aware:
                 # default scheduler: first node that fits
                 best = ((0,), node, p)
                 break
-            free_gpu, _ = self.cluster.free_masks(node)
+            free_gpu, _ = view.free_masks(node)
             leftover = free_gpu.bit_count() - workload.gpus_per_instance
             key = (p.tier, leftover, node)   # best tier, then best-fit
             if best is None or key < best[0]:
@@ -119,24 +133,21 @@ class TopoScheduler:
         if best is None:
             return None
         _, node, placement = best
-        inst = self.cluster.bind(workload, node, placement)
-        need_gpus, need_cgs, bundle = self._request(workload)
-        hit = is_topology_hit(self.cluster.spec, placement.gpu_mask,
-                              placement.cg_mask, need_gpus, need_cgs, bundle)
-        return ScheduleResult(inst, node, placement, hit)
+        return node, placement
 
-    # ---- preemption --------------------------------------------------------------
-    def _guaranteed_filter(self, workload: WorkloadSpec) -> list[int]:
+    # ---- planning: preemption ------------------------------------------------------
+    def _guaranteed_filter(self, workload: WorkloadSpec,
+                           view: ClusterView) -> list[int]:
         """Alg. 1 Filtering: nodes feasible under hypothetical full drain."""
         spec = self.cluster.spec
         need_gpus, need_cgs, bundle = self._request(workload)
         nodes = []
-        for node in range(self.cluster.num_nodes):
-            free_gpu, free_cg = self.cluster.free_masks(node)
-            for v in self.cluster.victims_on(node, workload.priority):
+        for node in range(view.num_nodes):
+            free_gpu, free_cg = view.free_masks(node)
+            for v in view.victims_on(node, workload.priority):
                 free_gpu |= v.gpu_mask
                 free_cg |= v.cg_mask
-            if self.engine == "godel":
+            if not self._engine.topology_aware:
                 ok = (free_gpu.bit_count() >= need_gpus
                       and free_cg.bit_count() >= need_cgs)
             elif workload.numa_policy == TopoPolicy.GUARANTEED:
@@ -149,79 +160,107 @@ class TopoScheduler:
                 nodes.append(node)
         return nodes
 
-    def _source(self, workload: WorkloadSpec, nodes: list[int]) -> list[Candidate]:
-        if self.engine == "godel":
-            out = []
-            for node in nodes:
-                c = preemption.godel_standard(self.cluster, workload, node)
-                if c is not None:
-                    out.append(c)
-            return out
-        if self.engine == "imp_batched":
-            # beyond-paper: all nodes' subsets evaluated in one vmapped sweep
-            return preemption_jax.source_candidates_batched(
-                self.cluster, workload, nodes)
-        if self.engine == "exhaustive":
-            fn: Callable = preemption.flextopo_exhaustive
-        elif self.engine == "imp":
-            fn = preemption.flextopo_imp
-        elif self.engine == "imp_jax":
-            fn = preemption_jax.flextopo_imp_vectorized
-        elif self.engine == "imp_pallas":
-            from repro.kernels import topo_score
-
-            fn = topo_score.flextopo_imp_pallas
-        else:
-            raise ValueError(f"unknown engine {self.engine}")
-        out = []
-        for node in nodes:
-            out.extend(fn(self.cluster, workload, node))
-        return out
-
-    def preempt(self, workload: WorkloadSpec) -> PreemptionResult | None:
-        nodes = self._guaranteed_filter(workload)
+    def _plan_preempt(
+        self, workload: WorkloadSpec, view: ClusterView,
+    ) -> tuple[SchedulingDecision, int | None]:
+        nodes = self._guaranteed_filter(workload, view)
         if not nodes:
-            return None
+            return SchedulingDecision(kind="rejected", workload=workload), None
         t0 = time.perf_counter()
-        candidates = self._source(workload, nodes)
+        candidates: list[Candidate] = self._engine.source_all(
+            view, workload, nodes)
         sourcing_us = (time.perf_counter() - t0) * 1e6
         self.sourcing_us_log.append(sourcing_us)
         if not candidates:
-            return None
-        if self.engine == "godel":
-            # standard policy: minimize evicted priority, then victim count
-            chosen = min(candidates,
-                         key=lambda c: (c.priority_sum, len(c.victims), c.node))
-        else:
-            chosen = select_best(candidates, self.alpha)
-        evicted = [self.cluster.evict(uid) for uid in chosen.victims]
-        placement = self._place_on(workload, chosen.node)
+            return SchedulingDecision(kind="rejected", workload=workload,
+                                      sourcing_us=sourcing_us), None
+        chosen = self._engine.select(candidates, self.alpha)
+        for uid in chosen.victims:
+            view.plan_evict(uid)
+        placement = self._place_on(workload, chosen.node, view)
         if placement is None:  # cannot happen if engines are correct
             raise RuntimeError("victim set freed insufficient resources")
-        inst = self.cluster.bind(workload, chosen.node, placement)
-        need_gpus, need_cgs, bundle = self._request(workload)
-        hit = is_topology_hit(self.cluster.spec, placement.gpu_mask,
-                              placement.cg_mask, need_gpus, need_cgs, bundle)
-        return PreemptionResult(
-            instance=inst, node=chosen.node, victims=chosen.victims,
-            placement=placement, hit=hit, sourcing_us=sourcing_us,
-            num_candidates=len(candidates), evicted=evicted,
-        )
+        planned = view.plan_bind(workload, chosen.node, placement)
+        return SchedulingDecision(
+            kind="preempted", workload=workload, node=chosen.node,
+            placement=placement, hit=self._hit(workload, placement),
+            victims=chosen.victims, sourcing_us=sourcing_us,
+            num_candidates=len(candidates),
+        ), planned.uid
 
-    def schedule_or_preempt(self, workload: WorkloadSpec):
-        res = self.schedule(workload)
-        if res is not None:
-            return res
-        return self.preempt(workload)
+    # ---- the transactional entry points --------------------------------------------
+    def plan(self, workload: WorkloadSpec, *, view: ClusterView | None = None,
+             allow_normal: bool = True,
+             allow_preempt: bool = True) -> Transaction:
+        """Evaluate one request Filtering → Sorting without mutating the cluster.
 
-    # ---- undo (for the paper's "independent preemptions" protocol) ---------------
-    def undo(self, result) -> None:
-        """Reverse a ScheduleResult/PreemptionResult (Table 4 protocol evaluates
-        each of the 50 scale-ups independently on the same saturated state)."""
-        self.cluster.evict(result.instance.uid)
-        if isinstance(result, PreemptionResult):
-            for victim in result.evicted:
-                self.cluster.bind(
-                    victim.workload, victim.node,
-                    Placement(victim.gpu_mask, victim.cg_mask, tier=0),
+        Returns a `Transaction` whose ``decision`` is fully evaluated (node,
+        placement, victims, topology hit, sourcing latency).  Call
+        ``commit()`` to bind it for real, or drop/``rollback()`` it for a
+        free independent evaluation.  Pass a shared ``view`` to compose
+        several plans against one snapshot (see ``plan_batch``).
+        """
+        view = view if view is not None else ClusterView(self.cluster)
+        decision: SchedulingDecision | None = None
+        planned_uid: int | None = None
+        if allow_normal:
+            normal = self._plan_normal(workload, view)
+            if normal is not None:
+                node, placement = normal
+                planned_uid = view.plan_bind(workload, node, placement).uid
+                decision = SchedulingDecision(
+                    kind="placed", workload=workload, node=node,
+                    placement=placement, hit=self._hit(workload, placement),
                 )
+        if decision is None and allow_preempt:
+            decision, planned_uid = self._plan_preempt(workload, view)
+        if decision is None:
+            decision = SchedulingDecision(kind="rejected", workload=workload)
+        return Transaction(cluster=self.cluster, decision=decision,
+                           on_event=self._notify, view=view,
+                           planned_uid=planned_uid)
+
+    def plan_batch(self, workloads: Iterable[WorkloadSpec],
+                   allow_preempt: bool = True) -> list[Transaction]:
+        """Plan several pending requests against ONE cluster snapshot.
+
+        All plans share a copy-on-write view: request *i+1* sees request
+        *i*'s planned evictions and binds, so the returned transactions can
+        be committed together in order.  With a cluster-wide engine
+        (``imp_batched``) each request's sourcing is a single vmapped sweep
+        over all its filtered nodes — the multi-request fast path.
+        """
+        view = ClusterView(self.cluster)
+        return [self.plan(wl, view=view, allow_preempt=allow_preempt)
+                for wl in workloads]
+
+    # ---- plan-and-commit conveniences ----------------------------------------------
+    def schedule(self, workload: WorkloadSpec) -> SchedulingDecision:
+        """Normal cycle only; commits immediately (kind placed | rejected)."""
+        return self.plan(workload, allow_preempt=False).commit()
+
+    def preempt(self, workload: WorkloadSpec) -> SchedulingDecision:
+        """Preemption only; commits immediately (kind preempted | rejected)."""
+        return self.plan(workload, allow_normal=False).commit()
+
+    def schedule_or_preempt(self, workload: WorkloadSpec) -> SchedulingDecision:
+        """Full Algorithm 1; commits immediately."""
+        return self.plan(workload).commit()
+
+    # ---- undo (compat shim over Transaction.rollback) -------------------------------
+    def undo(self, decision: SchedulingDecision) -> None:
+        """Reverse a committed decision (Table 4 protocol evaluates each of
+        the 50 scale-ups independently on the same saturated state).
+
+        Deprecated in favour of reading ``plan()`` decisions without
+        committing; kept as a shim that delegates to
+        ``Transaction.rollback()``, which restores every victim with its
+        original uid and full placement.
+        """
+        if decision.txn is None:
+            raise ValueError("decision has no transaction to roll back")
+        decision.txn.rollback()
+
+
+if __doc__ is not None:  # None under python -OO (docstrings stripped)
+    __doc__ = __doc__.format(engines=" | ".join(registered_engines()))

@@ -19,7 +19,7 @@ import numpy as np
 
 from .cluster import Cluster
 from .placement import Placement
-from .scheduler import EngineName, PreemptionResult, TopoScheduler
+from .scheduler import EngineName, TopoScheduler
 from .topology import RTX4090_SERVER, ServerSpec
 from .workload import (TABLE3_INITIAL_INSTANCES, WorkloadSpec,
                        table3_workloads)
@@ -197,8 +197,9 @@ def run_hit_rate_experiment(
 
     ``independent=True`` follows the paper's protocol ("for each instance
     scaled up, the candidate sourcing and victim selection processes are
-    evaluated independently"): every scale-up is evaluated against the cycle's
-    saturated state and then undone.  ``independent=False`` applies scale-ups
+    evaluated independently"): every scale-up is *planned* against the
+    cycle's saturated state and never committed — a rollback-free read of
+    the transactional API.  ``independent=False`` commits scale-ups
     sequentially (capacity depletes within a cycle).
     """
     report = HitRateReport(engine=engine)
@@ -210,17 +211,16 @@ def run_hit_rate_experiment(
         rng = random.Random(10_000 + cfg.seed + cycle)
         for _ in range(scaleups_per_cycle):
             wl = workloads[rng.choice(preemptor_names)]
-            res = sched.schedule_or_preempt(wl)
-            if isinstance(res, PreemptionResult):
+            txn = sched.plan(wl)
+            dec = txn.commit() if not independent else txn.decision
+            if dec.preempted:
                 report.preemptions += 1
-                report.hits += int(res.hit)
-                report.sourcing_us.append(res.sourcing_us)
-            elif res is None:
+                report.hits += int(dec.hit)
+                report.sourcing_us.append(dec.sourcing_us)
+            elif dec.rejected:
                 report.failures += 1
             # normal-cycle placements are not preemptions; Table 4 counts
             # preemptions only
-            if independent and res is not None:
-                sched.undo(res)
     return report
 
 
@@ -240,12 +240,12 @@ def run_latency_experiment(
             dataclasses.replace(cfg, seed=cfg.seed + cycle))
         sched = TopoScheduler(cluster, engine=engine, alpha=cfg.alpha)
         for _ in range(min(samples - len(report.sourcing_us), 10)):
-            res = sched.schedule_or_preempt(wl)
-            if isinstance(res, PreemptionResult):
+            dec = sched.schedule_or_preempt(wl)
+            if dec.preempted:
                 report.preemptions += 1
-                report.hits += int(res.hit)
-                report.sourcing_us.append(res.sourcing_us)
-            elif res is None:
+                report.hits += int(dec.hit)
+                report.sourcing_us.append(dec.sourcing_us)
+            elif dec.rejected:
                 break
         cycle += 1
         if cycle > samples:  # safety: cannot source enough preemptions
@@ -287,8 +287,7 @@ def run_allocation_snapshot(
     preempted = 0
     for _ in range(churn):
         wl = workloads[rng.choice(("B", "C"))]
-        res = sched.schedule_or_preempt(wl)
-        if isinstance(res, PreemptionResult):
+        if sched.schedule_or_preempt(wl).preempted:
             preempted += 1
     after = cluster.cross_socket_instances()
     return {

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.core.engines import register_engine
 from repro.core.topology import ServerSpec
 
 TIER_VALUES = (1.0, 0.5, 0.1)
@@ -130,6 +131,7 @@ def topo_score_pallas(
 # IMP engine backed by the kernel (scheduler engine "imp_pallas")
 # ---------------------------------------------------------------------------------
 
+@register_engine("imp_pallas")
 def flextopo_imp_pallas(cluster, workload, node):
     """Drop-in engine: same semantics as preemption.flextopo_imp."""
     from repro.core.preemption_jax import combo_table

@@ -1,3 +1,5 @@
-from .engine import BatchQueue, Request, ServeEngine
+from .engine import (TIER_PERF, BatchQueue, Request, ServeEngine,
+                     scheduled_factor)
 
-__all__ = ["BatchQueue", "Request", "ServeEngine"]
+__all__ = ["TIER_PERF", "BatchQueue", "Request", "ServeEngine",
+           "scheduled_factor"]

@@ -18,6 +18,22 @@ import numpy as np
 from repro.configs.shapes import cache_capacity
 from repro.models.api import ModelApi
 
+# Paper Fig. 2: relative communication cost per placement tier converted to a
+# scheduled-performance multiplier (NUMA-local = 1.0, same-socket, cross-socket).
+TIER_PERF = {0: 1.0, 1: 10 / 12, 2: 10 / 32}
+
+
+def scheduled_factor(decision) -> float:
+    """Fig. 2 performance multiplier for a committed `SchedulingDecision`.
+
+    Raw engine throughput times this factor gives the paper's "scheduled
+    performance" of the instance at its placement tier.  Rejected decisions
+    (no placement) score 0.
+    """
+    if decision.placement is None:
+        return 0.0
+    return TIER_PERF[decision.placement.tier]
+
 
 @dataclasses.dataclass
 class Request:

@@ -1,3 +1,4 @@
+import importlib.util
 import os
 import sys
 
@@ -5,3 +6,10 @@ import sys
 # placeholder devices (launch/dryrun.py sets XLA_FLAGS itself, in a
 # subprocess).  Keep this file free of XLA_FLAGS.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Property-based tests need hypothesis; skip those modules (instead of
+# erroring at collection) in minimal environments without it.
+collect_ignore = []
+if importlib.util.find_spec("hypothesis") is None:
+    collect_ignore = ["test_kernels.py", "test_placement.py",
+                      "test_preemption.py"]

@@ -2,7 +2,7 @@
 agent event semantics, autoscaler co-location."""
 import pytest
 
-from repro.core import (Cluster, PreemptionResult, RTX4090_SERVER,
+from repro.core import (Cluster, RTX4090_SERVER, SchedulingDecision,
                         TopoScheduler, table1_workloads)
 from repro.core.agent import AgentFleet
 from repro.core.autoscale import AutoscalePolicy, Autoscaler, diurnal_traffic
@@ -39,7 +39,7 @@ def test_fig3_a_scaleup_preempts_topology_aware():
     holds all C instances) — the paper's central example."""
     cluster, sched = fig3_cluster()
     res = sched.preempt(WL1["A"])
-    assert isinstance(res, PreemptionResult)
+    assert isinstance(res, SchedulingDecision) and res.preempted
     assert len(res.victims) == 4
     assert res.hit
     assert res.placement.tier <= 1           # same socket
@@ -50,7 +50,7 @@ def test_fig3_a_scaleup_preempts_topology_aware():
 def test_fig3_b_scaleup():
     cluster, sched = fig3_cluster()
     res = sched.preempt(WL1["B"])
-    assert isinstance(res, PreemptionResult)
+    assert res.preempted
     assert len(res.victims) == 2
     assert res.hit and res.placement.tier <= 1
 
@@ -114,9 +114,9 @@ def test_agent_periodic_scan_detects_gpu_failure():
     sched = TopoScheduler(cluster, engine="imp")
     for _ in range(7):
         res = sched.schedule(WL1["C"])
-        assert res is not None
+        assert res.placed
         assert not res.placement.gpu_mask >> 2 & 1
-    assert sched.schedule(WL1["C"]) is None  # only the failed GPU remains
+    assert sched.schedule(WL1["C"]).rejected  # only the failed GPU remains
 
 
 def test_autoscaler_diurnal_colocation():

@@ -1,0 +1,189 @@
+"""Transactional scheduling API: plan/commit/rollback round-trips.
+
+The paper's Table 4 "independent preemptions" protocol depends on evaluation
+leaving the cluster untouched; these tests assert bitwise-exact state
+round-trips (free masks, instance uids, per-victim placements) across every
+registered engine, for plan-only reads, commit+rollback, and the legacy
+``undo`` shim.
+"""
+import pytest
+
+from repro.core import (Cluster, RTX4090_SERVER, SchedulingDecision,
+                        TopoScheduler, TransactionError, registered_engines,
+                        table1_workloads)
+from repro.core.agent import AgentFleet
+from repro.core.decisions import COMMITTED, ROLLED_BACK
+
+WL1 = {w.name: w for w in table1_workloads()}
+ENGINES = registered_engines()
+
+
+def fig3_cluster(engine="imp"):
+    cluster = Cluster(RTX4090_SERVER, 3)
+    sched = TopoScheduler(cluster, engine=engine)
+    sched.schedule(WL1["A"])
+    for _ in range(6):
+        sched.schedule(WL1["B"])
+    for _ in range(8):
+        sched.schedule(WL1["C"])
+    return cluster, sched
+
+
+def snapshot(cluster):
+    """Free masks + full instance registry, bitwise."""
+    return (
+        tuple(cluster.free_masks(n) for n in range(cluster.num_nodes)),
+        tuple(sorted((uid, i.node, i.gpu_mask, i.cg_mask, i.workload.name)
+                     for uid, i in cluster.instances.items())),
+    )
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_plan_is_a_pure_read(engine):
+    cluster, sched = fig3_cluster(engine)
+    before = snapshot(cluster)
+    txn = sched.plan(WL1["A"])
+    assert txn.decision.preempted
+    assert snapshot(cluster) == before
+    txn.rollback()          # rolling back a planned txn is a no-op
+    assert txn.state == ROLLED_BACK
+    assert snapshot(cluster) == before
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_commit_rollback_roundtrip_is_bitwise_exact(engine):
+    cluster, sched = fig3_cluster(engine)
+    before = snapshot(cluster)
+    txn = sched.plan(WL1["A"])
+    dec = txn.commit()
+    assert txn.state == COMMITTED
+    assert dec.instance is not None and dec.instance.uid in cluster.instances
+    assert snapshot(cluster) != before
+    txn.rollback()
+    # free masks, instance uids, AND per-victim placements all restored
+    assert snapshot(cluster) == before
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_legacy_undo_delegates_to_rollback(engine):
+    cluster, sched = fig3_cluster(engine)
+    before = snapshot(cluster)
+    dec = sched.schedule_or_preempt(WL1["A"])
+    assert dec.preempted
+    sched.undo(dec)
+    assert snapshot(cluster) == before
+    # victims were restored with their ORIGINAL uids, not rebound as new
+    assert dec.txn.state == ROLLED_BACK
+
+
+def test_victim_restore_preserves_tier_fidelity():
+    """The old undo() rebound victims with tier=0 placements and fresh uids;
+    restore() must keep the exact masks so achieved tiers are unchanged."""
+    from repro.core.placement import achieved_tier
+
+    cluster, sched = fig3_cluster()
+    spec = cluster.spec
+    tiers_before = {uid: achieved_tier(spec, i.gpu_mask)
+                    for uid, i in cluster.instances.items()}
+    txn = sched.plan(WL1["A"])
+    txn.commit()
+    txn.rollback()
+    tiers_after = {uid: achieved_tier(spec, i.gpu_mask)
+                   for uid, i in cluster.instances.items()}
+    assert tiers_after == tiers_before
+
+
+def test_commit_twice_and_stale_plan_rejected():
+    cluster, sched = fig3_cluster()
+    txn = sched.plan(WL1["A"])
+    txn.commit()
+    with pytest.raises(TransactionError):
+        txn.commit()
+    # a second plan made before the first commit goes stale if its victims
+    # were taken by a conflicting commit
+    cluster2, sched2 = fig3_cluster()
+    t1 = sched2.plan(WL1["A"])
+    t2 = sched2.plan(WL1["A"])
+    t1.commit()
+    if set(t1.decision.victims) & set(t2.decision.victims):
+        with pytest.raises(TransactionError):
+            t2.commit()
+
+
+def test_rejected_decision_is_falsy_and_commits_as_noop():
+    cluster = Cluster(RTX4090_SERVER, 1)
+    sched = TopoScheduler(cluster, engine="imp")
+    while sched.schedule(WL1["B"]):
+        pass
+    before = snapshot(cluster)
+    dec = sched.schedule_or_preempt(WL1["B"])   # nothing preemptible below B
+    assert isinstance(dec, SchedulingDecision)
+    assert dec.rejected and not dec
+    assert snapshot(cluster) == before
+
+
+def test_plan_batch_composes_against_one_snapshot():
+    cluster, sched = fig3_cluster()
+    before = snapshot(cluster)
+    txns = sched.plan_batch([WL1["B"], WL1["B"], WL1["A"]])
+    assert [t.decision.kind for t in txns] == ["preempted"] * 3
+    assert snapshot(cluster) == before          # planning mutated nothing
+    # later plans saw earlier planned evictions: no victim is claimed twice
+    all_victims = [uid for t in txns for uid in t.decision.victims]
+    assert len(all_victims) == len(set(all_victims))
+    for t in txns:
+        t.commit()                              # the batch commits cleanly
+    counts = cluster.count_by_workload()
+    assert counts["A"] == 2 and counts["B"] == 8
+
+
+def test_plan_batch_later_plan_preempts_earlier_planned_bind():
+    """A later plan in the batch may pick an earlier plan's (still virtual)
+    bind as a victim; commit must resolve the virtual uid to the real one."""
+    from repro.core import table3_workloads
+
+    wl3 = {w.name: w for w in table3_workloads()}
+    cluster = Cluster(RTX4090_SERVER, 1)
+    sched = TopoScheduler(cluster, engine="imp")
+    for _ in range(6):                      # 6 GPUs of preemptible D work
+        assert sched.schedule(wl3["D"])
+    # batch: C (2 GPUs, fills the node) then A (needs all 8 -> must evict
+    # every D AND the C planned one line above)
+    txns = sched.plan_batch([wl3["C"], wl3["A"]])
+    kinds = [t.decision.kind for t in txns]
+    assert kinds == ["placed", "preempted"]
+    assert any(uid < 0 for uid in txns[1].decision.victims)  # virtual ref
+    for t in txns:
+        dec = t.commit()                    # must not raise TransactionError
+        assert dec
+    assert all(uid >= 0 for uid in txns[1].decision.victims)
+    assert cluster.count_by_workload() == {"A": 1}
+
+
+def test_plan_batch_matches_sequential_commits():
+    seq_cluster, seq_sched = fig3_cluster()
+    seq = [seq_sched.schedule_or_preempt(WL1["B"]) for _ in range(2)]
+    bat_cluster, bat_sched = fig3_cluster()
+    bat = [t.commit() for t in bat_sched.plan_batch([WL1["B"]] * 2)]
+    assert [(d.kind, d.node, d.victims) for d in seq] == \
+        [(d.kind, d.node, d.victims) for d in bat]
+    assert snapshot(seq_cluster) == snapshot(bat_cluster)
+
+
+def test_agent_fleet_watches_transactions():
+    """Commits/rollbacks drive event-driven CRD patches on touched nodes."""
+    cluster, sched = fig3_cluster()
+    fleet = AgentFleet(cluster)
+    fleet.watch(sched)
+    fleet.scan_all()                 # settle initial state
+    base = fleet.store.patch_count
+    txn = sched.plan(WL1["A"])       # planning alone patches nothing
+    assert fleet.store.patch_count == base
+    dec = txn.commit()
+    assert fleet.store.patch_count > base
+    crd = fleet.store.get(f"node-{dec.node}")
+    users = {g["usedBy"] for g in crd["status"]["gpus"] if g["usedBy"]}
+    assert dec.instance.name in users
+    after_commit = fleet.store.patch_count
+    txn.rollback()
+    assert fleet.store.patch_count > after_commit
