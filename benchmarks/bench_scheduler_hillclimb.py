@@ -9,9 +9,11 @@ independent preemptions.  Iterations:
   it2  per-node vectorized subset evaluation (imp_jax)  [hypothesis: slower —
        per-node dispatch overhead dominates at m<=8]
   it3  cluster-batched sweep: ONE vmapped evaluation per subset size over all
-       candidate nodes (imp_batched)
+       candidate nodes (imp_batched_legacy)
   it4  plan_batch: 8 pending preemptors planned against one snapshot through
        the batched engine (per-request amortized latency)
+  it5  fused single dispatch: all subset sizes + on-device Eq. 2 argmax in
+       one jit call over incrementally-cached victim rows (imp_batched)
 
 Independent samples are rollback-free: each is a pure ``plan()`` read
 against the saturated state — no mutate-then-undo.  Each iteration records
@@ -106,7 +108,8 @@ ITERATIONS = [
     ("it0_python_imp_naive", "imp", False),
     ("it1_python_imp_indexed", "imp", True),
     ("it2_pernode_vectorized", "imp_jax", True),
-    ("it3_cluster_batched", "imp_batched", True),
+    ("it3_cluster_batched", "imp_batched_legacy", True),
+    ("it5_fused_single_dispatch", "imp_batched", True),
 ]
 
 

@@ -1,19 +1,42 @@
 """Paper Table 5 / Fig 11 — candidate-sourcing latency P50/P90 by method.
 
 Paper methods: Gödel standard | FlexTopo (exhaustive) | FlexTopo-IMP.
-Beyond-paper engines: imp_batched (vectorized cluster-wide sweep) and
-imp_pallas (TPU kernel in interpret mode — NOT wall-clock-representative on
-CPU, reported for completeness).
+Beyond-paper engines: imp_batched_legacy (vectorized cluster-wide sweep, one
+jit dispatch per subset size), imp_batched (the FUSED single-dispatch path:
+all sizes + on-device Eq. 2 argmax over incrementally-cached arrays) and
+imp_pallas (TPU kernel, included when importable — interpret mode is NOT
+wall-clock-representative on CPU, reported for completeness).
 
 Workload classes match the paper: high-p-1000-4-card (B), low-p-500-2-card (C).
+
+Results are also written to ``BENCH_sourcing.json`` at the repo root so the
+perf trajectory is tracked across PRs; CI's regression smoke step
+(``benchmarks.check_sourcing_regression``) compares a fresh small-protocol
+run of the fused engine against the committed numbers.
 """
 from __future__ import annotations
+
+import json
+import pathlib
 
 from repro.core.simulator import SimConfig, run_latency_experiment
 
 from .common import FULL, emit, p
 
-ENGINES = ("godel", "exhaustive", "imp", "imp_batched")
+ENGINES = ("godel", "exhaustive", "imp", "imp_batched_legacy", "imp_batched")
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sourcing.json"
+
+
+def _optional_engines() -> tuple[str, ...]:
+    """Engines that need optional deps (Pallas): include iff importable."""
+    try:
+        from repro.core.engines import get_engine
+
+        get_engine("imp_pallas")
+        return ("imp_pallas",)
+    except Exception:
+        return ()
 
 
 def run(full: bool = FULL) -> list[dict]:
@@ -22,8 +45,11 @@ def run(full: bool = FULL) -> list[dict]:
     rows = []
     for wl, label in (("B", "high-p-1000-4-card"), ("C", "low-p-500-2-card")):
         base = {}
-        for engine in ENGINES:
-            rep = run_latency_experiment(cfg, engine, wl, samples=samples)
+        for engine in ENGINES + _optional_engines():
+            # interpret-mode Pallas is orders slower on CPU; keep its sample
+            # count small so the smoke protocol stays quick
+            n_samples = samples if engine != "imp_pallas" else min(samples, 5)
+            rep = run_latency_experiment(cfg, engine, wl, samples=n_samples)
             p50, p90 = p(rep.sourcing_us, 50), p(rep.sourcing_us, 90)
             base[engine] = (p50, p90)
             rows.append({"workload": label, "engine": engine, "p50_us": p50,
@@ -37,6 +63,15 @@ def run(full: bool = FULL) -> list[dict]:
             emit(f"table5_{label}_imp_opt", 0.0,
                  f"p50_saving={opt50:.1%} p90_saving={opt90:.1%} "
                  f"(paper: 7.3-76.5%)")
+        if base.get("imp_batched_legacy", (0,))[0]:
+            speedup = base["imp_batched_legacy"][0] / max(
+                base["imp_batched"][0], 1e-9)
+            emit(f"table5_{label}_fused_speedup", 0.0,
+                 f"fused_p50_over_legacy={speedup:.2f}x")
+    BENCH_JSON.write_text(json.dumps(
+        {"protocol": "full" if full else "small",
+         "num_nodes": cfg.num_nodes, "seed": cfg.seed, "samples": samples,
+         "rows": rows}, indent=2) + "\n")
     return rows
 
 

@@ -1,0 +1,79 @@
+"""CI smoke gate for the fused sourcing fast path.
+
+Re-runs the small-protocol Table 5 latency experiment for the fused
+``imp_batched`` engine (plus ``imp_batched_legacy`` for the hit-rate
+identity check) and fails if
+
+* the fused P50 regresses more than ``MAX_REGRESSION``x over the committed
+  ``BENCH_sourcing.json`` baseline, or
+* the fused hit rate diverges from the legacy engine at the same seed
+  (the fused on-device Eq. 2 selection must be decision-identical).
+
+CI machines are noisy, so the threshold is deliberately loose (2x): the gate
+catches structural regressions (a lost jit cache, an accidental per-k
+dispatch loop), not scheduler jitter.
+
+Run: ``PYTHONPATH=src python -m benchmarks.check_sourcing_regression``
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.core.simulator import SimConfig, run_latency_experiment
+
+from .bench_sourcing_latency import BENCH_JSON
+from .common import p
+
+MAX_REGRESSION = 2.0
+
+
+def main() -> int:
+    if not BENCH_JSON.exists():
+        print(f"FAIL: no committed baseline at {BENCH_JSON}")
+        return 1
+    baseline = json.loads(BENCH_JSON.read_text())
+    base_rows = {(r["workload"], r["engine"]): r for r in baseline["rows"]}
+    cfg = SimConfig(num_nodes=int(baseline.get("num_nodes", 50)),
+                    seed=int(baseline.get("seed", 0)))
+    samples = int(baseline.get("samples", 20))
+    failures = 0
+    for wl, label in (("B", "high-p-1000-4-card"), ("C", "low-p-500-2-card")):
+        ref = base_rows.get((label, "imp_batched"))
+        ref_legacy = base_rows.get((label, "imp_batched_legacy"))
+        if ref is None or not ref["p50_us"]:
+            print(f"SKIP {label}: no fused baseline row")
+            continue
+        fused = run_latency_experiment(cfg, "imp_batched", wl, samples=samples)
+        legacy = run_latency_experiment(cfg, "imp_batched_legacy", wl,
+                                        samples=samples)
+        p50 = p(fused.sourcing_us, 50)
+        # normalize away machine speed: when the legacy engine runs slower
+        # on THIS machine than in the committed run, relax the baseline by
+        # the same factor (clamped to >= 1 so noise never tightens the gate)
+        norm = 1.0
+        if ref_legacy and ref_legacy["p50_us"]:
+            norm = max(1.0, p(legacy.sourcing_us, 50) / ref_legacy["p50_us"])
+        ratio = p50 / (ref["p50_us"] * norm)
+        status = "ok" if ratio <= MAX_REGRESSION else "REGRESSION"
+        print(f"{label}: fused p50 {p50:.0f}us vs baseline "
+              f"{ref['p50_us']:.0f}us (machine norm {norm:.2f}, "
+              f"{ratio:.2f}x) [{status}]")
+        if ratio > MAX_REGRESSION:
+            failures += 1
+        if (fused.preemptions, fused.hits) != (legacy.preemptions, legacy.hits):
+            print(f"FAIL {label}: fused hits {fused.hits}/{fused.preemptions} "
+                  f"!= legacy {legacy.hits}/{legacy.preemptions}")
+            failures += 1
+        else:
+            print(f"{label}: hit-rate identical to legacy "
+                  f"({fused.hits}/{fused.preemptions})")
+    if failures:
+        print(f"FAIL: {failures} sourcing-latency gate(s) tripped")
+        return 1
+    print("sourcing fast path within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,12 +3,15 @@
 The scheduler and simulator mutate cluster state exclusively through this
 class so that the FlexTopo graphs, the bitmask arrays, and the instance
 registry can never diverge.  ``arrays()`` exports the dense engine view used
-by the vectorized/Pallas preemption engines.
+by the vectorized/Pallas preemption engines, and ``sourcing_context()``
+hands out the incrementally-maintained `SourcingContext` the fused
+single-dispatch engine reads instead of rebuilding arrays per ``plan()``.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+from typing import Callable
 
 import numpy as np
 
@@ -16,6 +19,13 @@ from .flextopo import FlexTopo
 from .placement import Placement
 from .topology import ServerSpec
 from .workload import Instance, WorkloadSpec
+
+#: Widest per-node victim row the dense sourcing arrays encode.  Nodes
+#: holding more preemptible instances than this overflow the row and are
+#: sourced through the per-node python engine instead (see
+#: ``preemption_jax``) — the batched engines degrade gracefully rather than
+#: crash.
+MAX_DENSE_VICTIMS = 16
 
 
 @dataclasses.dataclass
@@ -43,6 +53,11 @@ class Cluster:
         self.node_index = node_index
         self._by_node: list[set[int]] = [set() for _ in range(num_nodes)]
         self._mask_cache: list[tuple[int, int] | None] = [None] * num_nodes
+        # node-dirty fan-out: every mutation funnels through invalidate_node,
+        # which notifies subscribers (the SourcingContext) so dense engine
+        # rows refresh incrementally instead of rebuilding from instance lists
+        self._dirty_listeners: list[Callable[[int], None]] = []
+        self._sourcing_ctx: "SourcingContext | None" = None
 
     # ---- mutation -----------------------------------------------------------------
     def bind(self, workload: WorkloadSpec, node: int, placement: Placement) -> Instance:
@@ -53,14 +68,14 @@ class Cluster:
         self.topos[node].allocate(inst.name, gpus, cgs)
         self.instances[inst.uid] = inst
         self._by_node[node].add(inst.uid)
-        self._mask_cache[node] = None
+        self.invalidate_node(node)
         return inst
 
     def evict(self, uid: int) -> Instance:
         inst = self.instances.pop(uid)
         self.topos[inst.node].release(inst.name)
         self._by_node[inst.node].discard(uid)
-        self._mask_cache[inst.node] = None
+        self.invalidate_node(inst.node)
         return inst
 
     def restore(self, inst: Instance) -> Instance:
@@ -77,11 +92,25 @@ class Cluster:
         self.topos[inst.node].allocate(inst.name, gpus, cgs)
         self.instances[inst.uid] = inst
         self._by_node[inst.node].add(inst.uid)
-        self._mask_cache[inst.node] = None
+        self.invalidate_node(inst.node)
         return inst
 
     def invalidate_node(self, node: int) -> None:
+        """Single choke point for node-state changes: drops the free-mask
+        cache and notifies dirty listeners (incremental sourcing arrays)."""
         self._mask_cache[node] = None
+        for fn in self._dirty_listeners:
+            fn(node)
+
+    def add_dirty_listener(self, fn: Callable[[int], None]) -> None:
+        """Subscribe to per-node invalidation events (bind/evict/restore)."""
+        self._dirty_listeners.append(fn)
+
+    def sourcing_context(self) -> "SourcingContext":
+        """The lazily-created incremental array cache for fused sourcing."""
+        if self._sourcing_ctx is None:
+            self._sourcing_ctx = SourcingContext(self)
+        return self._sourcing_ctx
 
     # ---- queries --------------------------------------------------------------------
     def free_masks(self, node: int) -> tuple[int, int]:
@@ -239,3 +268,131 @@ class ClusterView:
     def resolve_uid(self, uid: int) -> int:
         """Map a virtual (planned-bind) uid to the real uid it committed as."""
         return self.committed_uids.get(uid, uid)
+
+    def delta_nodes(self) -> set[int]:
+        """Nodes whose state differs from the base cluster (planned deltas)."""
+        return ({i.node for i in self._evicted.values()}
+                | {i.node for i in self._added.values()})
+
+
+class SourcingContext:
+    """Incrementally-maintained dense arrays for the fused sourcing path.
+
+    One row per node holds the padded bitmask/priority/uid arrays of ALL
+    preemptible instances on that node (sorted by ``(priority, uid)``, the
+    same order ``victims_on`` yields).  The preemptor-priority filter is NOT
+    baked in: the fused evaluator masks victims by ``priority < preemptor``
+    on device, so one cache serves every preemptor class.
+
+    Invalidation semantics: the context subscribes to the cluster's
+    ``invalidate_node`` choke point (hit by every ``bind``/``evict``/
+    ``restore``/explicit invalidation) and marks rows dirty; ``refresh()``
+    rebuilds only the dirty rows lazily before the next read.  A full
+    ``plan()`` therefore touches O(dirty nodes) python state instead of
+    reconstructing ``[N, M]`` arrays from instance lists.
+
+    ``rank`` is each victim's uid-rank within its node's stored victims —
+    the fused evaluator packs a combo's ranks into a bitmask whose integer
+    order equals the lexicographic order of the combo's sorted uid tuple,
+    reproducing ``select_best``'s victim-uid tie-break on device.
+
+    Rows with more than `MAX_DENSE_VICTIMS` preemptible instances are marked
+    ``overflow`` but still store the first `cap` victims (the lowest
+    ``(priority, uid)`` prefix) plus ``next_prio``, the priority of the
+    first victim NOT stored.  Because any preemptor's eligible victims
+    (``priority < preemptor``) are a prefix of that order, a truncated row
+    stays on the fused fast path whenever ``next_prio >= preemptor``;
+    callers fall back to per-node sourcing only when eligible victims
+    genuinely exceed the row (the old ``_bucket`` ValueError now degrades
+    instead of crashing).
+    """
+
+    def __init__(self, cluster: Cluster, cap: int = MAX_DENSE_VICTIMS) -> None:
+        self.cluster = cluster
+        self.cap = cap
+        n = cluster.num_nodes
+        self.free_gpu = np.zeros(n, np.int32)
+        self.free_cg = np.zeros(n, np.int32)
+        self.vg = np.zeros((n, cap), np.int32)      # victim GPU bitmasks
+        self.vc = np.zeros((n, cap), np.int32)      # victim CoreGroup bitmasks
+        self.vp = np.zeros((n, cap), np.int32)      # victim priorities
+        self.vu = np.zeros((n, cap), np.int64)      # victim uids
+        self.rank = np.zeros((n, cap), np.int32)    # uid-rank within the node
+        self.stored = np.zeros((n, cap), bool)      # slot holds an instance
+        self.count = np.zeros(n, np.int32)          # preemptible instances
+        self.overflow = np.zeros(n, bool)           # count > cap: truncated
+        self.next_prio = np.full(n, 2**31 - 1, np.int32)  # 1st unstored prio
+        self._dirty: set[int] = set(range(n))
+        cluster.add_dirty_listener(self._dirty.add)
+
+    def refresh(self) -> None:
+        """Re-derive every dirty row from the live cluster state."""
+        for node in self._dirty:
+            self.refresh_row(node, self.cluster)
+        self._dirty.clear()
+
+    def refresh_row(self, node: int, source) -> None:
+        """Fill one row from ``source`` (the base cluster or a ClusterView)."""
+        row = encode_row(source, node, self.cap)
+        self.free_gpu[node] = row.free_gpu
+        self.free_cg[node] = row.free_cg
+        self.count[node] = row.count
+        self.overflow[node] = row.overflow
+        self.next_prio[node] = row.next_priority
+        self.stored[node] = row.stored
+        self.vg[node] = row.vg
+        self.vc[node] = row.vc
+        self.vp[node] = row.vp
+        self.vu[node] = row.vu
+        self.rank[node] = row.rank
+
+
+@dataclasses.dataclass
+class VictimRow:
+    """One node's encoded dense sourcing row (padded to ``cap`` slots)."""
+
+    free_gpu: int
+    free_cg: int
+    count: int
+    overflow: bool           # count > cap: only the prefix is stored
+    next_priority: int       # priority of the first victim NOT stored
+    vg: np.ndarray           # int32[cap]
+    vc: np.ndarray
+    vp: np.ndarray
+    vu: np.ndarray           # int64[cap]
+    rank: np.ndarray
+    stored: np.ndarray       # bool[cap]
+
+
+def encode_row(source, node: int, cap: int) -> VictimRow:
+    """Shared row encoder over any Cluster-like read interface (the base
+    cluster for `SourcingContext` rows, a `ClusterView` for per-plan
+    delta patches).
+
+    When a node holds more than ``cap`` preemptible instances only the
+    lowest ``(priority, uid)`` prefix is stored; ``next_priority`` lets
+    callers decide per preemptor whether the eligible victims still fit.
+    """
+    fg, fc = source.free_masks(node)
+    victims = sorted((i for i in source.instances_on(node) if i.preemptible),
+                     key=lambda i: (i.priority, i.uid))
+    row = VictimRow(
+        free_gpu=fg, free_cg=fc, count=len(victims),
+        overflow=len(victims) > cap,
+        next_priority=victims[cap].priority if len(victims) > cap
+        else 2**31 - 1,
+        vg=np.zeros(cap, np.int32), vc=np.zeros(cap, np.int32),
+        vp=np.zeros(cap, np.int32), vu=np.zeros(cap, np.int64),
+        rank=np.zeros(cap, np.int32), stored=np.zeros(cap, bool),
+    )
+    victims = victims[:cap]
+    for j, v in enumerate(victims):
+        row.vg[j] = v.gpu_mask
+        row.vc[j] = v.cg_mask
+        row.vp[j] = v.priority
+        row.vu[j] = v.uid
+        row.stored[j] = True
+    if victims:
+        uids = np.asarray([v.uid for v in victims])
+        row.rank[: len(victims)] = np.argsort(np.argsort(uids))
+    return row

@@ -48,8 +48,15 @@ class SourcingEngine(Protocol):
         """Candidates for one node."""
         ...
 
-    def source_all(self, cluster, workload, nodes: list[int]) -> list[Candidate]:
-        """Candidates for all filtered nodes (batched engines do one sweep)."""
+    def source_all(self, cluster, workload, nodes: list[int],
+                   alpha: float | None = None) -> list[Candidate]:
+        """Candidates for all filtered nodes (batched engines do one sweep).
+
+        ``alpha`` is the scheduler's Eq. 1 weight; *fused* engines that run
+        the Eq. 2 selection on device (``imp_batched``) consume it during
+        sourcing and return only the winning shortlist.  The scheduler
+        passes it whenever the engine's signature accepts it.
+        """
         ...
 
     def select(self, candidates: list[Candidate], alpha: float) -> Candidate | None:
@@ -66,15 +73,22 @@ class EngineSpec:
     source_nodes: Callable | None = None    # fn(cluster, workload, nodes)
     topology_aware: bool = True
     selector: Callable | None = None        # fn(candidates, alpha) -> Candidate
+    needs_alpha: bool = False               # source_nodes takes alpha= (fused)
 
     def source(self, cluster, workload, node: int) -> list[Candidate]:
         if self.source_node is not None:
             return list(self.source_node(cluster, workload, node))
-        return list(self.source_nodes(cluster, workload, [node]))
+        return self.source_all(cluster, workload, [node])
 
-    def source_all(self, cluster, workload, nodes: list[int]) -> list[Candidate]:
+    def source_all(self, cluster, workload, nodes: list[int],
+                   alpha: float | None = None) -> list[Candidate]:
         if self.source_nodes is not None:
-            return list(self.source_nodes(cluster, workload, nodes))
+            if self.needs_alpha and alpha is not None:
+                got = self.source_nodes(cluster, workload, nodes, alpha=alpha)
+            else:
+                got = self.source_nodes(cluster, workload, nodes)
+            # keep list subclasses intact (CandidateShortlist.n_candidates)
+            return got if isinstance(got, list) else list(got)
         out: list[Candidate] = []
         for node in nodes:
             out.extend(self.source_node(cluster, workload, node))
@@ -112,13 +126,16 @@ def register_engine(
     batched: bool = False,
     topology_aware: bool = True,
     selector: Callable | None = None,
+    needs_alpha: bool = False,
 ):
     """Decorator: register a sourcing function (or a full engine object).
 
     Plain functions take ``(cluster, workload, node)`` — or
     ``(cluster, workload, nodes)`` with ``batched=True`` — and return
-    `Candidate` lists.  Objects already satisfying `SourcingEngine` are
-    registered as-is.
+    `Candidate` lists.  ``needs_alpha=True`` marks a batched function whose
+    signature ends in ``alpha=`` because it fuses the Eq. 2 selection into
+    sourcing (``imp_batched``).  Objects already satisfying `SourcingEngine`
+    are registered as-is.
     """
 
     def deco(obj):
@@ -131,6 +148,7 @@ def register_engine(
                 source_nodes=obj if batched else None,
                 topology_aware=topology_aware,
                 selector=selector,
+                needs_alpha=needs_alpha,
             )
         _LAZY.pop(name, None)
         return obj

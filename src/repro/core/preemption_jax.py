@@ -8,6 +8,21 @@ axis.  The same math is retiled as a Pallas TPU kernel in
 ``repro.kernels.topo_score`` — this module is its jit'd reference engine and
 is also what ``cluster_parallel`` shard_maps across the device mesh.
 
+Two cluster-wide engines share the math:
+
+* ``imp_batched`` (default, *fused*): ONE jit dispatch per victim-bucket
+  group evaluates every subset of every size — a subset is its slot-bitmask
+  id, so ``k`` is just ``popcount(id)`` — and the per-node
+  smallest-feasible-``k`` plus the global Eq. 2 argmax reduce on device.
+  In the common case (all nodes <= 8 victims) that is exactly one dispatch;
+  only the winner's indices (a handful of scalars) cross back to the host,
+  and the padded victim rows come from the cluster's
+  incrementally-maintained `SourcingContext`.
+* ``imp_batched_legacy``: the original multi-dispatch sweep (one jit call
+  per subset size, full ``[N, n_comb]`` tier/priority transfers, python
+  Candidate construction).  Kept for parity testing and as the reference
+  for the fused path's semantics.
+
 Tier convention matches ``placement.best_tier``:
 0 = single NUMA, 1 = single socket, 2 = cross-socket, 3 = infeasible.
 """
@@ -20,9 +35,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .cluster import Cluster
+from .cluster import MAX_DENSE_VICTIMS, Cluster, encode_row
 from .engines import register_engine
-from .scoring import Candidate
+from .scoring import DEFAULT_ALPHA, TIER_SCORES, Candidate
 from .topology import ServerSpec
 from .workload import TopoPolicy, WorkloadSpec
 
@@ -101,34 +116,39 @@ def _evaluate_subsets_core(
     # per-NUMA availability: popcount(freed & numa_mask)   -> [n_comb, U]
     cnt_gpu = jax.lax.population_count(freed_gpu[:, None] & numa_gpu_masks[None, :])
     cnt_cg = jax.lax.population_count(freed_cg[:, None] & numa_cg_masks[None, :])
+    tier = _tier_from_counts(cnt_gpu, cnt_cg, sock_onehot, request)
+    tier = jnp.where(valid, tier, 3).astype(jnp.int32)
+    return tier, prio_sum, valid
 
+
+def _tier_from_counts(cnt_gpu, cnt_cg, sock_onehot, request: Request):
+    """Tier of each subset from its per-NUMA availability counts.
+
+    ``cnt_gpu``/``cnt_cg`` are ``[..., U]`` (any leading batch shape; the
+    NUMA axis is last) — the single tier-semantics implementation shared by
+    the per-size evaluator and the fused single-dispatch evaluator.
+    """
     if request.need_gpus == 0:
-        numa_ok = jnp.any(cnt_cg >= request.need_cgs, axis=1)
+        numa_ok = jnp.any(cnt_cg >= request.need_cgs, axis=-1)
         sock_cg = cnt_cg @ sock_onehot
-        sock_ok = jnp.any(sock_cg >= request.need_cgs, axis=1)
-        glob_ok = jnp.sum(cnt_cg, axis=1) >= request.need_cgs
+        sock_ok = jnp.any(sock_cg >= request.need_cgs, axis=-1)
+        glob_ok = jnp.sum(cnt_cg, axis=-1) >= request.need_cgs
     else:
-        if request.bundle_locality:
-            units = jnp.minimum(cnt_gpu, cnt_cg // max(request.cgs_per_bundle, 1))
-            if request.cgs_per_bundle == 0:
-                units = cnt_gpu
+        if request.bundle_locality and request.cgs_per_bundle > 0:
+            units = jnp.minimum(cnt_gpu, cnt_cg // request.cgs_per_bundle)
         else:
             units = cnt_gpu
         numa_ok = jnp.any(
-            (units >= request.need_gpus) & (cnt_cg >= request.need_cgs), axis=1
-        )
-        sock_units = units @ sock_onehot    # [n_comb, S]
+            (units >= request.need_gpus) & (cnt_cg >= request.need_cgs),
+            axis=-1)
+        sock_units = units @ sock_onehot    # [..., S]
         sock_cg = cnt_cg @ sock_onehot
         sock_ok = jnp.any(
-            (sock_units >= request.need_gpus) & (sock_cg >= request.need_cgs), axis=1
-        )
-        glob_ok = (jnp.sum(units, axis=1) >= request.need_gpus) & (
-            jnp.sum(cnt_cg, axis=1) >= request.need_cgs
-        )
-
-    tier = jnp.where(numa_ok, 0, jnp.where(sock_ok, 1, jnp.where(glob_ok, 2, 3)))
-    tier = jnp.where(valid, tier, 3).astype(jnp.int32)
-    return tier, prio_sum, valid
+            (sock_units >= request.need_gpus) & (sock_cg >= request.need_cgs),
+            axis=-1)
+        glob_ok = (jnp.sum(units, axis=-1) >= request.need_gpus) & (
+            jnp.sum(cnt_cg, axis=-1) >= request.need_cgs)
+    return jnp.where(numa_ok, 0, jnp.where(sock_ok, 1, jnp.where(glob_ok, 2, 3)))
 
 
 evaluate_subsets = partial(jax.jit, static_argnames=("request",))(
@@ -151,22 +171,57 @@ def evaluate_subsets_batched(request: Request):
 
 
 def _bucket(m: int) -> int:
-    """Pad victim count to a small set of buckets to bound jit recompiles."""
+    """Pad victim count to a small set of buckets to bound jit recompiles.
+
+    Callers must partition away nodes holding more than `MAX_DENSE_VICTIMS`
+    victims first (``split_dense_nodes``): those fall back to the per-node
+    python engine instead of tripping this guard.
+    """
     for b in (4, 8, 16):
         if m <= b:
             return b
     raise ValueError(f"too many victims on one node: {m}")
 
 
+def split_dense_nodes(
+    cluster, workload: WorkloadSpec, nodes: list[int],
+) -> tuple[list[int], list[int], dict[int, list]]:
+    """Partition nodes into (dense, overflow) by victim-row capacity.
+
+    Overflow nodes (> `MAX_DENSE_VICTIMS` potential victims) cannot be
+    encoded in the padded arrays; the batched engines source them through
+    the per-node python IMP instead of raising (old ``_bucket`` crash).
+    """
+    per_node = {n: cluster.victims_on(n, workload.priority) for n in nodes}
+    dense = [n for n in nodes if len(per_node[n]) <= MAX_DENSE_VICTIMS]
+    overflow = [n for n in nodes if len(per_node[n]) > MAX_DENSE_VICTIMS]
+    return dense, overflow, per_node
+
+
+def _overflow_candidates(cluster, workload: WorkloadSpec,
+                         nodes: list[int]) -> list[Candidate]:
+    from .preemption import flextopo_imp
+
+    out: list[Candidate] = []
+    for node in nodes:
+        out.extend(flextopo_imp(cluster, workload, node))
+    return out
+
+
 def cluster_victim_arrays(
     cluster: Cluster, workload: WorkloadSpec, nodes: list[int],
+    per_node: dict[int, list] | None = None,
 ):
     """Padded per-node victim arrays for the batched/sharded engines.
 
     Returns (free_gpu[N], free_cg[N], vg[N,M], vc[N,M], vp[N,M], valid[N,M],
-    victims_per_node list-of-lists).
+    victims_per_node list-of-lists).  ``per_node`` lets callers reuse the
+    victim scan from ``split_dense_nodes``.
     """
-    per_node = [cluster.victims_on(n, workload.priority) for n in nodes]
+    if per_node is not None:
+        per_node = [per_node[n] for n in nodes]
+    else:
+        per_node = [cluster.victims_on(n, workload.priority) for n in nodes]
     m = _bucket(max((len(v) for v in per_node), default=1) or 1)
     n = len(nodes)
     free_gpu = np.zeros(n, np.int32)
@@ -186,7 +241,7 @@ def cluster_victim_arrays(
     return free_gpu, free_cg, vg, vc, vp, valid, per_node
 
 
-@register_engine("imp_batched", batched=True)
+@register_engine("imp_batched_legacy", batched=True)
 def source_candidates_batched(
     cluster: Cluster, workload: WorkloadSpec, nodes: list[int],
 ) -> list[Candidate]:
@@ -195,6 +250,10 @@ def source_candidates_batched(
     Per-node IMP semantics are preserved: a node contributes candidates only
     at ITS smallest feasible k (tracked with done flags); the sweep continues
     until every node is done or k exceeds the largest victim count.
+
+    This is the legacy multi-dispatch path (one jit call + device→host
+    transfer per subset size); the fused single-dispatch rewrite is
+    registered as ``imp_batched``.
     """
     spec = cluster.spec
     consts = spec_constants(spec)
@@ -203,8 +262,13 @@ def source_candidates_batched(
         need_cgs=workload.coregroups_per_instance(spec.coregroup_size),
         bundle_locality=workload.numa_policy == TopoPolicy.GUARANTEED,
     )
-    free_gpu, free_cg, vg, vc, vp, valid, per_node = cluster_victim_arrays(
+    nodes, overflow, victims_by_node = split_dense_nodes(
         cluster, workload, nodes)
+    extra = _overflow_candidates(cluster, workload, overflow)
+    if not nodes:
+        return extra
+    free_gpu, free_cg, vg, vc, vp, valid, per_node = cluster_victim_arrays(
+        cluster, workload, nodes, per_node=victims_by_node)
     m = vg.shape[1]
     fn = evaluate_subsets_batched(request)
     done = np.zeros(len(nodes), bool)
@@ -242,7 +306,7 @@ def source_candidates_batched(
                         tier=int(tier[i, idx]),
                         priority_sum=int(prio[i, idx]),
                     ))
-    return out
+    return out + extra
 
 
 def _victim_arrays(cluster: Cluster, workload: WorkloadSpec, node: int):
@@ -297,3 +361,332 @@ def flextopo_imp_vectorized(cluster: Cluster, workload: WorkloadSpec, node: int
                 for i in feasible
             ]
     return []
+
+
+# ---------------------------------------------------------------------------------
+# Fused single-dispatch sourcing (engine "imp_batched")
+# ---------------------------------------------------------------------------------
+#
+# A victim subset is its slot-bitmask id c in [0, 2^m): member slots are the
+# set bits of c and the subset size is popcount(c), so every size k=0..m is
+# evaluated in ONE device program with no ragged tables.  The program also
+# reduces to the final Eq. 2 winner on device, reproducing
+# `scoring.select_best`'s ordering:
+#
+#   maximize  (Eq. 1 score, fewer victims, lower node id,
+#              lexicographically smallest sorted victim-uid tuple)
+#
+# The uid tie-break uses the rank trick: slot j's uid-rank r_j (from the
+# SourcingContext) contributes bit (m-1-r_j) to a combo "uid mask", and for
+# equal-size subsets of one node, larger uid mask == lexicographically
+# smaller sorted uid tuple.  Scores are compared in f32 on device with an
+# exact integer priority-sum refinement between ties, which matches the
+# host's f64 ordering whenever distinct candidate scores are at least a few
+# f32 ulps apart — true for realistic priority scales (the per-class gap is
+# alpha*|1/p1 - 1/p2| >= alpha/p^2 which stays above f32 resolution for
+# priorities up to tens of thousands); `imp_batched_legacy` keeps the exact
+# host-side semantics for adversarial inputs.
+
+_INT32_MAX = np.int32(2**31 - 1)
+
+# rows of the stacked fused inputs (see `_fused_select_core`)
+NODE_FIELDS = 3      # free_gpu, free_cg, node_id
+VICTIM_FIELDS = 5    # gpu_mask, cg_mask, priority, uid_rank, stored
+
+
+def _fused_select_core(
+    nodestate: jnp.ndarray,  # int32[3, N]: free_gpu | free_cg | node_id
+    victims: jnp.ndarray,    # int32[5, N, m]: gpu | cg | prio | rank | stored
+    thresh: jnp.ndarray,     # int32[]     preemptor priority
+    *,
+    spec: ServerSpec,
+    request: Request,
+    alpha: float,
+    m: int,
+):
+    """Evaluate all 2^m victim subsets of N nodes and reduce to the Eq. 2
+    winner in one program.
+
+    Inputs arrive as two stacked tensors (one host→device transfer each).
+    Victim masks of one node are pairwise disjoint and disjoint from the
+    free mask (the allocator guarantees it), so every per-subset fold —
+    freed-GPU/CG masks, priority sum, and the uid-rank tie-break mask — is a
+    single int32 matmul against the static subset-membership bit table
+    instead of an unrolled OR loop.  Padding rows use node_id = INT32_MAX
+    and stored = 0 and can never win.
+
+    Returns int32[7]: (found, row, tier, combo_id, prio_sum, k,
+    n_candidates): ``row`` indexes the input batch, ``combo_id``'s set bits
+    are the winning victim slots, and ``n_candidates`` counts the feasible
+    subsets at each node's own smallest feasible size (the legacy engine's
+    candidate count).
+    """
+    free_gpu, free_cg, node_ids = nodestate[0], nodestate[1], nodestate[2]
+    vg, vc, vp, rank = victims[0], victims[1], victims[2], victims[3]
+    stored = victims[4] != 0
+    n_comb = 1 << m
+    cids = jnp.arange(n_comb, dtype=jnp.int32)
+    kk = jax.lax.population_count(cids)                       # [n_comb]
+    bits = ((cids[None, :] >> jnp.arange(m, dtype=jnp.int32)[:, None])
+            & 1)                                              # [m, n_comb]
+
+    # victims valid under this preemptor: stored & strictly lower priority
+    valid_slot = stored & (vp < thresh)                       # [N, m]
+    slot_bits = jnp.left_shift(
+        jnp.int32(1), jnp.arange(m, dtype=jnp.int32))         # [m]
+    valid_mask = valid_slot.astype(jnp.int32) @ slot_bits      # [N]
+    combo_ok = (cids[None, :] & ~valid_mask[:, None]) == 0     # [N, n_comb]
+
+    # all per-subset folds in one [4, N, m] @ [m, n_comb] contraction.
+    # rank bits use the full cap width: truncated rows carry uid-ranks over
+    # the whole stored prefix, which can exceed the sliced bucket m.
+    rankbit = jnp.left_shift(jnp.int32(1), MAX_DENSE_VICTIMS - 1 - rank)
+    payload = jnp.stack([vg, vc, vp, rankbit])                 # [4, N, m]
+    sums = jax.lax.dot_general(payload, bits,
+                               (((2,), (0,)), ((), ())))       # [4, N, n_comb]
+    combo_gpu = free_gpu[:, None] + sums[0]    # disjoint masks: sum == OR
+    combo_cg = free_cg[:, None] + sums[1]
+    prio_sum = sums[2]
+    umask = sums[3]
+
+    # per-NUMA availability: popcount(freed & numa_mask) -> [N, n_comb, U];
+    # SKU constants shared with the legacy evaluator
+    consts = spec_constants(spec)
+    numa_g = consts["numa_gpu_masks"]
+    numa_c = consts["numa_cg_masks"]
+    sock_onehot = consts["sock_onehot"]
+    cnt_gpu = jax.lax.population_count(
+        combo_gpu[:, :, None] & numa_g[None, None, :])
+    cnt_cg = jax.lax.population_count(
+        combo_cg[:, :, None] & numa_c[None, None, :])
+    tier = _tier_from_counts(cnt_gpu, cnt_cg, sock_onehot, request)
+    tier = jnp.where(combo_ok, tier, 3).astype(jnp.int32)
+
+    # ---- per-node smallest feasible k (IMP early stop, on device) ---------------
+    feasible = tier < 3
+    big_k = jnp.int32(m + 1)
+    k_node = jnp.min(jnp.where(feasible, kk[None, :], big_k), axis=1)   # [N]
+    atmin = feasible & (kk[None, :] == k_node[:, None])
+    n_candidates = jnp.sum(atmin.astype(jnp.int32))
+
+    # ---- per-(node, tier) winner via exact integer keys -------------------------
+    # within one node all candidates share k, so the Eq. 2 order inside a
+    # (node, tier) class is: smaller priority sum (when alpha > 0), then the
+    # uid tie-break (always) — tensorized over the three tier classes.
+    p_eff = prio_sum if alpha > 0 else jnp.zeros_like(prio_sum)
+    big_p = jnp.int32(_INT32_MAX)
+    t3 = jnp.arange(3, dtype=jnp.int32)
+    sel = atmin[:, :, None] & (tier[:, :, None] == t3)         # [N, n_comb, 3]
+    anyc = jnp.any(sel, axis=1)                                # [N, 3]
+    pmin = jnp.min(jnp.where(sel, p_eff[:, :, None], big_p), axis=1)
+    sel = sel & (p_eff[:, :, None] == pmin[:, None, :])
+    umax = jnp.max(jnp.where(sel, umask[:, :, None], -1), axis=1)
+    sel = sel & (umask[:, :, None] == umax[:, None, :])
+    cb = jnp.argmax(sel, axis=1).astype(jnp.int32)             # [N, 3]
+    pp = jnp.take_along_axis(prio_sum, cb, axis=1)             # [N, 3]
+    ppe = pp if alpha > 0 else jnp.zeros_like(pp)
+
+    # ---- global Eq. 2 argmax over the <= 3N class winners -----------------------
+    tier_vals = jnp.asarray(tuple(TIER_SCORES), jnp.float32)
+    prio_term = jnp.where(pp > 0,
+                          1.0 / jnp.maximum(pp, 1).astype(jnp.float32), 1.0)
+    score = alpha * prio_term + (1.0 - alpha) * tier_vals[None, :]
+    score = jnp.where(anyc, score, -jnp.inf)
+    sel = anyc & (score == jnp.max(score))
+    # Exact refinement between f32 score ties, then the host tie-break
+    # chain: fewer victims, lower node, uid order.  When every survivor
+    # shares one tier, an f32 tie with distinct priority sums means f32
+    # merely conflated scores f64 distinguishes — refine by lower priority
+    # sum (the f64 order).  Survivors from DIFFERENT tiers are treated as a
+    # genuine Eq. 1 tie and skip the refinement so the victim-count break
+    # applies first, as in `select_best`.  The one case left behind is a
+    # cross-tier pair whose f64 scores differ by less than f32 resolution —
+    # that needs single-digit priority sums; `imp_batched_legacy` keeps
+    # exact host-side semantics for such adversarial inputs.
+    tcol = jnp.broadcast_to(t3[None, :], sel.shape)
+    same_tier = (jnp.min(jnp.where(sel, tcol, 3))
+                 == jnp.max(jnp.where(sel, tcol, -1)))
+    ppe_key = jnp.where(same_tier, ppe, 0)
+    sel = sel & (ppe_key == jnp.min(jnp.where(sel, ppe_key, big_p)))
+    kn = jnp.broadcast_to(k_node[:, None], sel.shape)
+    sel = sel & (kn == jnp.min(jnp.where(sel, kn, big_k)))
+    nid = jnp.broadcast_to(node_ids[:, None], sel.shape)
+    sel = sel & (nid == jnp.min(jnp.where(sel, nid, big_p)))
+    um = jnp.take_along_axis(umask, cb, axis=1)
+    sel = sel & (um == jnp.max(jnp.where(sel, um, -1)))
+    flat = jnp.argmax(sel.reshape(-1)).astype(jnp.int32)
+    row = flat // 3
+    return jnp.stack([
+        jnp.any(anyc).astype(jnp.int32),     # found
+        row,                                 # batch row of the winner
+        flat % 3,                            # tier
+        cb.reshape(-1)[flat],                # combo id (victim-slot bitmask)
+        pp.reshape(-1)[flat],                # priority sum
+        k_node[row],                         # subset size
+        n_candidates,
+    ])
+
+
+@lru_cache(maxsize=None)
+def fused_evaluator(spec: ServerSpec, request: Request, alpha: float, m: int):
+    """jit of the fused evaluator with SKU constants baked in."""
+    return jax.jit(partial(_fused_select_core, spec=spec, request=request,
+                           alpha=alpha, m=m))
+
+
+def _pad_rows(n: int) -> int:
+    """Pad the node axis to a few buckets so jit caches stay warm."""
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+#: node-axis chunk size for the widest (m=16) victim bucket: keeps the
+#: [chunk, 2^16, U] popcount intermediates to tens of MB per dispatch.
+MAX_ROWS_WIDE = 16
+
+
+class CandidateShortlist(list):
+    """``list[Candidate]`` that also reports the TRUE candidate count.
+
+    The fused engine returns only per-dispatch winners, but the device
+    already counted every feasible min-k subset; ``n_candidates`` carries
+    that count so ``SchedulingDecision.num_candidates`` stays comparable
+    with the exhaustive-listing engines.
+    """
+
+    n_candidates: int = 0
+
+
+def _assemble_group(ctx, sel_nodes: list[int], patches: dict, m: int):
+    """Stacked dense inputs for one dispatch over ``sel_nodes`` at victim
+    bucket ``m``: (nodestate int32[3, n_pad], victims int32[5, n_pad, m],
+    uids int64[n_sel, m])."""
+    idx = np.asarray(sel_nodes, np.int64)
+    n = len(sel_nodes)
+    n_pad = _pad_rows(n)
+    nodestate = np.zeros((NODE_FIELDS, n_pad), np.int32)
+    nodestate[2] = _INT32_MAX          # pad rows: unreachable node id
+    nodestate[0, :n] = ctx.free_gpu[idx]
+    nodestate[1, :n] = ctx.free_cg[idx]
+    nodestate[2, :n] = sel_nodes
+    victims = np.zeros((VICTIM_FIELDS, n_pad, m), np.int32)
+    victims[0, :n] = ctx.vg[idx, :m]
+    victims[1, :n] = ctx.vc[idx, :m]
+    victims[2, :n] = ctx.vp[idx, :m]
+    victims[3, :n] = ctx.rank[idx, :m]
+    victims[4, :n] = ctx.stored[idx, :m]
+    uids = ctx.vu[idx, :m]
+    for pos, node in enumerate(sel_nodes):   # O(view delta) row patches
+        row = patches.get(node)
+        if row is None:
+            continue
+        nodestate[0, pos] = row.free_gpu
+        nodestate[1, pos] = row.free_cg
+        victims[0, pos] = row.vg[:m]
+        victims[1, pos] = row.vc[:m]
+        victims[2, pos] = row.vp[:m]
+        victims[3, pos] = row.rank[:m]
+        victims[4, pos] = row.stored[:m]
+        uids[pos] = row.vu[:m]
+    return nodestate, victims, uids
+
+
+def fused_rows(cluster, workload: WorkloadSpec, nodes: list[int]):
+    """Per-dispatch input groups for ``nodes``, served from the base
+    cluster's `SourcingContext` with copy-on-write view deltas patched at
+    O(delta) cost (only changed nodes are re-encoded; the base rows are
+    never copied wholesale).
+
+    Nodes are grouped by their ELIGIBLE-victim bucket so the common narrow
+    rows (<= 8 eligible victims, <= 256 subsets) never pay the wide
+    2^16-subset program: one group covers every narrow node, and nodes
+    with 9..16 eligible victims go to m=16 dispatches chunked to
+    `MAX_ROWS_WIDE` rows.  Truncated rows (> cap preemptible instances)
+    stay on the fast path while the preemptor's eligible victims fit the
+    stored prefix.  Returns (groups, overflow_nodes) with each group =
+    (sel_nodes, nodestate, victims, uids).
+    """
+    base = getattr(cluster, "base", cluster)
+    ctx = base.sourcing_context()
+    ctx.refresh()
+    delta = cluster.delta_nodes() if hasattr(cluster, "delta_nodes") else ()
+    patches = {d: encode_row(cluster, d, ctx.cap)
+               for d in set(delta) & set(nodes)}
+    idx = np.asarray(nodes, np.int64)
+    thresh = workload.priority
+    # bucket by the ELIGIBLE victim count (priority < preemptor) — eligible
+    # victims are a prefix of each (priority, uid)-sorted row, so slicing to
+    # the eligible bucket keeps every victim this preemptor may evict
+    elig = ((ctx.vp[idx] < thresh) & ctx.stored[idx]).sum(axis=1)
+    trunc = ctx.overflow[idx].copy()
+    next_p = ctx.next_prio[idx].copy()
+    for pos, node in enumerate(nodes):
+        row = patches.get(node)
+        if row is not None:
+            elig[pos] = int(((row.vp < thresh) & row.stored).sum())
+            trunc[pos] = row.overflow
+            next_p[pos] = row.next_priority
+    # a truncated row falls back only if eligible victims extend past it
+    over = trunc & (next_p < thresh)
+    overflow = [n for n, o in zip(nodes, over) if o]
+    narrow = [i for i in range(len(nodes)) if not over[i] and elig[i] <= 8]
+    wide = [i for i in range(len(nodes))
+            if not over[i] and 8 < elig[i] <= MAX_DENSE_VICTIMS]
+    groups = []
+    if narrow:
+        m = _bucket(max(int(elig[narrow].max()), 1))
+        sel = [nodes[i] for i in narrow]
+        groups.append((sel,) + _assemble_group(ctx, sel, patches, m))
+    for lo in range(0, len(wide), MAX_ROWS_WIDE):
+        sel = [nodes[i] for i in wide[lo:lo + MAX_ROWS_WIDE]]
+        groups.append((sel,) + _assemble_group(ctx, sel, patches, 16))
+    return groups, overflow
+
+
+@register_engine("imp_batched", batched=True, needs_alpha=True)
+def source_candidates_fused(
+    cluster, workload: WorkloadSpec, nodes: list[int],
+    alpha: float = DEFAULT_ALPHA,
+) -> list[Candidate]:
+    """Fused cluster-wide IMP: candidate sourcing AND Eq. 2 selection in one
+    jit dispatch per victim-bucket group (exactly one dispatch in the
+    common all-narrow case), fed by incrementally-cached victim arrays.
+
+    Returns the winning `Candidate` per dispatch (plus per-node python
+    candidates for overflow nodes the dense rows cannot encode) as a
+    `CandidateShortlist` carrying the true evaluated-candidate count; the
+    scheduler's ``select`` then reduces this shortlist with the exact
+    host-side Eq. 2.  Winner parity with ``imp_batched_legacy`` +
+    ``select_best`` is covered by tests/test_fused_sourcing.py.
+    """
+    if not nodes:
+        return CandidateShortlist()
+    spec = cluster.spec
+    request = Request(
+        need_gpus=workload.gpus_per_instance,
+        need_cgs=workload.coregroups_per_instance(spec.coregroup_size),
+        bundle_locality=workload.numa_policy == TopoPolicy.GUARANTEED,
+    )
+    groups, overflow = fused_rows(cluster, workload, nodes)
+    out = CandidateShortlist(_overflow_candidates(cluster, workload, overflow))
+    out.n_candidates = len(out)
+    for sel_nodes, nodestate, victims, uids in groups:
+        m = victims.shape[2]
+        fn = fused_evaluator(spec, request, float(alpha), m)
+        res = fn(jnp.asarray(nodestate), jnp.asarray(victims),
+                 jnp.int32(workload.priority))
+        found, row, tier, combo, prio, _k, ncand = (int(v) for v in
+                                                    jax.device_get(res))
+        out.n_candidates += ncand
+        if found:
+            victim_uids = [int(uids[row, j]) for j in range(m)
+                           if (combo >> j) & 1]
+            out.append(Candidate(
+                node=sel_nodes[row],
+                victims=tuple(sorted(victim_uids)),
+                tier=tier,
+                priority_sum=prio,
+            ))
+    return out

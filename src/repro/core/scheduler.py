@@ -36,6 +36,7 @@ candidate-sourcing phase ("the primary contributor to time overhead").
 """
 from __future__ import annotations
 
+import inspect
 import time
 from typing import Callable, Iterable
 
@@ -62,6 +63,14 @@ class TopoScheduler:
         self.engine: EngineName = engine
         self._engine: SourcingEngine = get_engine(engine)
         self.alpha = alpha
+        # fused engines run the Eq. 2 selection inside sourcing and need the
+        # scheduler's alpha; pass it iff the engine's signature accepts it
+        # (custom engine objects with the legacy 3-arg source_all still work)
+        try:
+            sig = inspect.signature(self._engine.source_all)
+            self._source_takes_alpha = "alpha" in sig.parameters
+        except (TypeError, ValueError):
+            self._source_takes_alpha = False
         # Local (node-internal) allocation is kubelet-style topology-aware for
         # ALL engines — the paper's baseline miss comes from topology-blind
         # victim/node selection freeing badly-distributed resources, not from
@@ -167,8 +176,11 @@ class TopoScheduler:
         if not nodes:
             return SchedulingDecision(kind="rejected", workload=workload), None
         t0 = time.perf_counter()
-        candidates: list[Candidate] = self._engine.source_all(
-            view, workload, nodes)
+        if self._source_takes_alpha:
+            candidates: list[Candidate] = self._engine.source_all(
+                view, workload, nodes, alpha=self.alpha)
+        else:
+            candidates = self._engine.source_all(view, workload, nodes)
         sourcing_us = (time.perf_counter() - t0) * 1e6
         self.sourcing_us_log.append(sourcing_us)
         if not candidates:
@@ -185,7 +197,10 @@ class TopoScheduler:
             kind="preempted", workload=workload, node=chosen.node,
             placement=placement, hit=self._hit(workload, placement),
             victims=chosen.victims, sourcing_us=sourcing_us,
-            num_candidates=len(candidates),
+            # fused engines return a winner shortlist but report the true
+            # evaluated-candidate count via CandidateShortlist.n_candidates
+            num_candidates=getattr(candidates, "n_candidates",
+                                   len(candidates)),
         ), planned.uid
 
     # ---- the transactional entry points --------------------------------------------

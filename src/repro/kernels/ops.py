@@ -1,7 +1,9 @@
 """jit'd public wrappers for the Pallas kernels.
 
-``interpret=True`` everywhere in this container (CPU); flip to compiled mode
-on real TPU via the ``REPRO_PALLAS_COMPILED`` env var or the interpret kwarg.
+Interpret mode resolves through ``topo_score._interpret_default``:
+``REPRO_PALLAS_INTERPRET=1|0|auto`` (auto = interpret unless the backend is
+TPU).  The legacy ``REPRO_PALLAS_COMPILED=1`` switch still forces compiled
+mode for back-compat; the ``interpret`` kwarg overrides everything.
 """
 from __future__ import annotations
 
@@ -14,18 +16,26 @@ import jax.numpy as jnp
 from . import flash_attention as _fa
 from . import topo_score as _ts
 
-_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILED", "") != "1"
+
+def _interpret() -> bool:
+    if os.environ.get("REPRO_PALLAS_COMPILED", "") == "1":
+        return False
+    return _ts._interpret_default()
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
                                    "interpret"))
 def flash_attention(q, k, v, *, causal=True, window=None, block_q=128,
-                    block_k=128, interpret=_INTERPRET):
+                    block_k=128, interpret=None):
+    if interpret is None:
+        interpret = _interpret()
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                block_q=block_q, block_k=block_k,
                                interpret=interpret)
 
 
-def topo_score(combo_gpu, combo_cg, prio, spec, req, interpret=_INTERPRET):
+def topo_score(combo_gpu, combo_cg, prio, spec, req, interpret=None):
+    if interpret is None:
+        interpret = _interpret()
     return _ts.topo_score_pallas(combo_gpu, combo_cg, prio, spec, req,
                                  interpret=interpret)

@@ -8,12 +8,27 @@ constants baked into the kernel — and the Eq. 1 score is pure VPU math.  One
 grid step scores a (8, 128) tile of subsets from VMEM; a 100k-subset sourcing
 wave is a handful of grid steps.
 
+Two kernels share the tier/score math:
+
+* ``topo_score_pallas``        — tier + Eq. 1 score per subset (dense out).
+* ``topo_score_argmax_pallas`` — same, plus a *per-tile running argmax*:
+  each grid step also reduces its tile to (smallest feasible subset size,
+  best tier, best score, flat index of that winner), so the ``imp_pallas``
+  engine evaluates every subset size in ONE dispatch and only scans the
+  dense outputs at the winning size.
+
 Layout: subsets are padded to (rows, 128) int32.  Outputs: tier (0/1/2,
 3 = infeasible) and the Eq. 1 score (-inf where infeasible).
+
+``interpret`` resolution: the Mosaic interpreter is required off-TPU.  Pass
+``interpret=None`` (default) to auto-detect (interpret unless the JAX
+backend is TPU), or force it with the ``REPRO_PALLAS_INTERPRET`` env var
+("1"/"0"/"auto").
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 from functools import partial
 
 import jax
@@ -27,6 +42,19 @@ from repro.core.topology import ServerSpec
 TIER_VALUES = (1.0, 0.5, 0.1)
 ROWS_PER_TILE = 8
 LANES = 128
+#: k fill value for padding lanes in the argmax kernel (also the "no
+#: feasible subset in this tile" sentinel of the per-tile k-min output).
+K_INFEASIBLE = np.int32(2**30)
+
+
+def _interpret_default() -> bool:
+    """Resolve the Mosaic-interpreter flag: env override, else backend."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "auto").lower()
+    if env in ("1", "true", "yes"):
+        return True
+    if env in ("0", "false", "no"):
+        return False
+    return jax.default_backend() != "tpu"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,12 +65,8 @@ class TopoRequest:
     alpha: float = 0.5
 
 
-def _kernel(combo_gpu_ref, combo_cg_ref, prio_ref, tier_ref, score_ref, *,
-            spec: ServerSpec, req: TopoRequest):
-    g_mask = combo_gpu_ref[...]
-    c_mask = combo_cg_ref[...]
-    prio = prio_ref[...]
-
+def _tier_score(g_mask, c_mask, prio, *, spec: ServerSpec, req: TopoRequest):
+    """Shared VPU math: (tier int32, Eq. 1 score f32) for one tile."""
     U = spec.num_numa
     S = spec.num_sockets
     shape = g_mask.shape
@@ -76,7 +100,6 @@ def _kernel(combo_gpu_ref, combo_cg_ref, prio_ref, tier_ref, score_ref, *,
     tier = jnp.where(numa_ok, 0, jnp.where(sock_ok, 1,
                                            jnp.where(glob_ok, 2, 3)))
     tier = tier.astype(jnp.int32)
-    tier_ref[...] = tier
 
     tv = TIER_VALUES + (0.0,)
     topo = jnp.where(tier == 0, tv[0],
@@ -85,7 +108,57 @@ def _kernel(combo_gpu_ref, combo_cg_ref, prio_ref, tier_ref, score_ref, *,
     prio_term = jnp.where(prio > 0,
                           1.0 / jnp.maximum(prio, 1).astype(jnp.float32), 1.0)
     score = req.alpha * prio_term + (1.0 - req.alpha) * topo
-    score_ref[...] = jnp.where(tier < 3, score, -jnp.inf).astype(jnp.float32)
+    score = jnp.where(tier < 3, score, -jnp.inf).astype(jnp.float32)
+    return tier, score
+
+
+def _kernel(combo_gpu_ref, combo_cg_ref, prio_ref, tier_ref, score_ref, *,
+            spec: ServerSpec, req: TopoRequest):
+    tier, score = _tier_score(combo_gpu_ref[...], combo_cg_ref[...],
+                              prio_ref[...], spec=spec, req=req)
+    tier_ref[...] = tier
+    score_ref[...] = score
+
+
+def _argmax_kernel(combo_gpu_ref, combo_cg_ref, prio_ref, k_ref,
+                   tier_ref, score_ref, kmin_ref, btier_ref, bscore_ref,
+                   bidx_ref, *, spec: ServerSpec, req: TopoRequest):
+    """Tier/score tile + per-tile running argmax.
+
+    The reduction implements the IMP selection order inside one tile:
+    smallest feasible subset size k first, then tier-then-score (lowest
+    tier, highest Eq. 1 score), then lowest flat subset index.  Host-side
+    merging of the ``[n_tiles]`` outputs is O(tiles) on scalars, so the
+    engine dispatches exactly once per node regardless of victim count.
+    """
+    tier, score = _tier_score(combo_gpu_ref[...], combo_cg_ref[...],
+                              prio_ref[...], spec=spec, req=req)
+    tier_ref[...] = tier
+    score_ref[...] = score
+
+    k = k_ref[...]
+    feas = tier < 3
+    big = jnp.int32(K_INFEASIBLE)
+    kmin = jnp.min(jnp.where(feas, k, big))
+    kmin_ref[0] = kmin
+    sel = feas & (k == kmin)
+    tmin = jnp.min(jnp.where(sel, tier, 3))
+    btier_ref[0] = tmin
+    sel &= tier == tmin
+    smax = jnp.max(jnp.where(sel, score, -jnp.inf))
+    bscore_ref[0] = smax
+    sel &= score == smax
+    rows, lanes = k.shape
+    flat = (jax.lax.broadcasted_iota(jnp.int32, (rows, lanes), 0) * lanes
+            + jax.lax.broadcasted_iota(jnp.int32, (rows, lanes), 1))
+    local = jnp.min(jnp.where(sel, flat, big))
+    bidx_ref[0] = pl.program_id(0) * (rows * lanes) + local
+
+
+def _tiled(x, fill, n_pad, tile):
+    return jnp.pad(x, [(0, n_pad - x.shape[0])],
+                   constant_values=fill).reshape(
+        n_pad // tile, ROWS_PER_TILE, LANES)
 
 
 def topo_score_pallas(
@@ -94,21 +167,18 @@ def topo_score_pallas(
     prio: jnp.ndarray,
     spec: ServerSpec,
     req: TopoRequest,
-    interpret: bool = True,      # CPU container: interpret; False on real TPU
+    interpret: bool | None = None,   # None: auto (env/backend detection)
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (tier int32[n], score f32[n])."""
+    if interpret is None:
+        interpret = _interpret_default()
     n = combo_gpu.shape[0]
     tile = ROWS_PER_TILE * LANES
     n_pad = -(-n // tile) * tile
-    pad = [(0, n_pad - n)]
 
-    def prep(x, fill):
-        return jnp.pad(x, pad, constant_values=fill).reshape(
-            n_pad // tile, ROWS_PER_TILE, LANES)
-
-    cg2 = prep(combo_gpu, 0)
-    cc2 = prep(combo_cg, 0)
-    pr2 = prep(prio, 0)
+    cg2 = _tiled(combo_gpu, 0, n_pad, tile)
+    cc2 = _tiled(combo_cg, 0, n_pad, tile)
+    pr2 = _tiled(prio, 0, n_pad, tile)
 
     grid = (n_pad // tile,)
     blk = pl.BlockSpec((None, ROWS_PER_TILE, LANES), lambda i: (i, 0, 0))
@@ -127,19 +197,96 @@ def topo_score_pallas(
     return tier.reshape(-1)[:n], score.reshape(-1)[:n]
 
 
+def topo_score_argmax_pallas(
+    combo_gpu: jnp.ndarray,      # int32[n] freed-GPU mask per subset
+    combo_cg: jnp.ndarray,
+    prio: jnp.ndarray,
+    k: jnp.ndarray,              # int32[n] subset size per lane
+    spec: ServerSpec,
+    req: TopoRequest,
+    interpret: bool | None = None,
+):
+    """Single-dispatch scoring of subsets of EVERY size plus the per-tile
+    running argmax.
+
+    Returns (tier int32[n], score f32[n], kmin int32[T], btier int32[T],
+    bscore f32[T], bidx int32[T]) with T = number of (8, 128) grid tiles;
+    ``kmin[t] == K_INFEASIBLE`` marks a tile with no feasible subset, and
+    ``bidx`` is the *global* flat index of tile t's winner under the
+    (k, tier-then-score, index) order.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    n = combo_gpu.shape[0]
+    tile = ROWS_PER_TILE * LANES
+    n_pad = -(-n // tile) * tile
+
+    cg2 = _tiled(combo_gpu, 0, n_pad, tile)
+    cc2 = _tiled(combo_cg, 0, n_pad, tile)
+    pr2 = _tiled(prio, 0, n_pad, tile)
+    kk2 = _tiled(k, K_INFEASIBLE, n_pad, tile)
+
+    n_tiles = n_pad // tile
+    blk = pl.BlockSpec((None, ROWS_PER_TILE, LANES), lambda i: (i, 0, 0))
+    scl = pl.BlockSpec((1,), lambda i: (i,))
+    kernel = partial(_argmax_kernel, spec=spec, req=req)
+    tier, score, kmin, btier, bscore, bidx = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[blk, blk, blk, blk],
+        out_specs=[blk, blk, scl, scl, scl, scl],
+        out_shape=[
+            jax.ShapeDtypeStruct(cg2.shape, jnp.int32),
+            jax.ShapeDtypeStruct(cg2.shape, jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles,), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles,), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles,), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cg2, cc2, pr2, kk2)
+    return tier.reshape(-1)[:n], score.reshape(-1)[:n], kmin, btier, bscore, bidx
+
+
 # ---------------------------------------------------------------------------------
 # IMP engine backed by the kernel (scheduler engine "imp_pallas")
 # ---------------------------------------------------------------------------------
 
+def _all_size_combos(free_gpu: int, free_cg: int, vg, vc, vp):
+    """Every victim subset as its slot-bitmask id: freed masks, priority sum
+    and subset size for ids 0..2^m-1 (id 0 = evict nothing)."""
+    m = len(vg)
+    ids = np.arange(1 << m, dtype=np.int64)
+    cg = np.full(ids.shape, free_gpu, np.int64)
+    cc = np.full(ids.shape, free_cg, np.int64)
+    pr = np.zeros(ids.shape, np.int64)
+    kk = np.zeros(ids.shape, np.int64)
+    for j in range(m):
+        b = (ids >> j) & 1
+        cg |= b * int(vg[j])
+        cc |= b * int(vc[j])
+        pr += b * int(vp[j])
+        kk += b
+    return ids, cg, cc, pr, kk
+
+
 @register_engine("imp_pallas")
 def flextopo_imp_pallas(cluster, workload, node):
-    """Drop-in engine: same semantics as preemption.flextopo_imp."""
-    from repro.core.preemption_jax import combo_table
+    """Drop-in engine: same semantics as preemption.flextopo_imp, but every
+    subset size is evaluated in ONE kernel dispatch — the per-tile running
+    argmax locates the smallest feasible size, then candidates are read off
+    the dense tier output at that size only."""
+    from repro.core.cluster import MAX_DENSE_VICTIMS
     from repro.core.scoring import Candidate
     from repro.core.workload import TopoPolicy
 
     spec = cluster.spec
     victims = cluster.victims_on(node, workload.priority)
+    if len(victims) > MAX_DENSE_VICTIMS:
+        # 2^m lanes would blow up; the per-node python engine is exact
+        from repro.core.preemption import flextopo_imp
+
+        return flextopo_imp(cluster, workload, node)
     free_gpu, free_cg = cluster.free_masks(node)
     need_gpus = workload.gpus_per_instance
     need_cgs = workload.coregroups_per_instance(spec.coregroup_size)
@@ -147,35 +294,26 @@ def flextopo_imp_pallas(cluster, workload, node):
     req = TopoRequest(
         need_gpus=need_gpus, need_cgs=need_cgs,
         cgs_per_bundle=(need_cgs // need_gpus if (bundle and need_gpus) else 0))
-    m = len(victims)
-    vg = np.array([v.gpu_mask for v in victims], dtype=np.int64)
-    vc = np.array([v.cg_mask for v in victims], dtype=np.int64)
-    vp = np.array([v.priority for v in victims], dtype=np.int64)
-    for k in range(0, m + 1):
-        table = combo_table(max(m, 1), k) if m else np.zeros((1, 0), np.int32)
-        if k == 0:
-            cg = np.array([free_gpu], dtype=np.int64)
-            cc = np.array([free_cg], dtype=np.int64)
-            pr = np.zeros(1, np.int64)
-        else:
-            cg = free_gpu | np.bitwise_or.reduce(vg[table], axis=1)
-            cc = free_cg | np.bitwise_or.reduce(vc[table], axis=1)
-            pr = vp[table].sum(axis=1)
-        tier, _ = topo_score_pallas(
-            jnp.asarray(cg, jnp.int32), jnp.asarray(cc, jnp.int32),
-            jnp.asarray(pr, jnp.int32), spec, req)
-        tier = np.asarray(tier)
-        feasible = np.nonzero(tier < 3)[0]
-        if feasible.size:
-            return [
-                Candidate(
-                    node=node,
-                    victims=tuple(sorted(victims[j].uid for j in table[i])),
-                    tier=int(tier[i]),
-                    priority_sum=int(pr[i]),
-                )
-                for i in feasible
-            ]
-        if m == 0:
-            break
-    return []
+    vg = [v.gpu_mask for v in victims]
+    vc = [v.cg_mask for v in victims]
+    vp = [v.priority for v in victims]
+    ids, cg, cc, pr, kk = _all_size_combos(free_gpu, free_cg, vg, vc, vp)
+    tier, _, kmin, _, _, _ = topo_score_argmax_pallas(
+        jnp.asarray(cg, jnp.int32), jnp.asarray(cc, jnp.int32),
+        jnp.asarray(pr, jnp.int32), jnp.asarray(kk, jnp.int32), spec, req)
+    k_star = int(np.min(np.asarray(kmin)))
+    if k_star >= int(K_INFEASIBLE):
+        return []
+    tier = np.asarray(tier)
+    at_min = np.nonzero((tier < 3) & (kk == k_star))[0]
+    return [
+        Candidate(
+            node=node,
+            victims=tuple(sorted(
+                victims[j].uid for j in range(len(victims))
+                if (int(ids[i]) >> j) & 1)),
+            tier=int(tier[i]),
+            priority_sum=int(pr[i]),
+        )
+        for i in at_min
+    ]

@@ -180,8 +180,13 @@ def _write(path: str, rec: dict) -> None:
 
 
 def run_scheduler_cell(mesh_kind: str, out_dir: str, force: bool = False) -> dict:
-    """Dry-run the distributed candidate sourcing (cluster_parallel) itself."""
-    from repro.core.cluster_parallel import lower_distributed_source
+    """Dry-run the distributed candidate sourcing (cluster_parallel) itself.
+
+    Lowers both the per-size legacy sweep and the fused single-dispatch
+    evaluator (all subset sizes + on-device Eq. 2 argmax) over the mesh.
+    """
+    from repro.core.cluster_parallel import (lower_distributed_fused_source,
+                                             lower_distributed_source)
     from repro.core.topology import RTX4090_SERVER
 
     cell = _cell_name("scheduler-sourcing", "cluster64k", mesh_kind)
@@ -202,6 +207,11 @@ def run_scheduler_cell(mesh_kind: str, out_dir: str, force: bool = False) -> dic
                          (compiled.cost_analysis() or {}).items()
                          if k in ("flops", "bytes accessed")},
                    hlo=hlo_util.summarize(compiled.as_text()))
+        t0 = time.time()
+        fused = lower_distributed_fused_source(mesh, RTX4090_SERVER).compile()
+        rec["fused"] = {"compile_s": round(time.time() - t0, 2),
+                        "memory": _memory_dict(fused.memory_analysis()),
+                        "hlo": hlo_util.summarize(fused.as_text())}
     except Exception as e:  # noqa: BLE001
         rec.update(status="error", error=f"{type(e).__name__}: {e}",
                    traceback=traceback.format_exc()[-4000:])
