@@ -4,14 +4,19 @@ Re-runs the small-protocol Table 5 latency experiment for the fused
 ``imp_batched`` engine (plus ``imp_batched_legacy`` for the hit-rate
 identity check) and fails if
 
-* the fused P50 regresses more than ``MAX_REGRESSION``x over the committed
+* the fused sourcing P50 — or the filtering-inclusive end-to-end ``plan()``
+  P50 — regresses more than ``MAX_REGRESSION``x over the committed
   ``BENCH_sourcing.json`` baseline, or
 * the fused hit rate diverges from the legacy engine at the same seed
-  (the fused on-device Eq. 2 selection must be decision-identical).
+  (the fused on-device Filtering + Eq. 2 selection must be
+  decision-identical).
 
-CI machines are noisy, so the threshold is deliberately loose (2x): the gate
-catches structural regressions (a lost jit cache, an accidental per-k
-dispatch loop), not scheduler jitter.
+Baseline rows tagged ``"interpret": true`` (Mosaic-interpreter Pallas runs
+on CPU) are placeholders, not wall-clock measurements — the gate skips
+them.  CI machines are noisy, so the threshold is deliberately loose (2x):
+the gate catches structural regressions (a lost jit cache, an accidental
+per-k dispatch loop, a host re-upload of the resident state), not
+scheduler jitter.
 
 Run: ``PYTHONPATH=src python -m benchmarks.check_sourcing_regression``
 """
@@ -20,7 +25,8 @@ from __future__ import annotations
 import json
 import sys
 
-from repro.core.simulator import SimConfig, run_latency_experiment
+from repro.core.simulator import (SimConfig, run_latency_experiment,
+                                  run_plan_latency_experiment)
 
 from .bench_sourcing_latency import BENCH_JSON
 from .common import p
@@ -33,16 +39,21 @@ def main() -> int:
         print(f"FAIL: no committed baseline at {BENCH_JSON}")
         return 1
     baseline = json.loads(BENCH_JSON.read_text())
-    base_rows = {(r["workload"], r["engine"]): r for r in baseline["rows"]}
+    base_rows = {(r["workload"], r["engine"], r.get("metric", "sourcing")): r
+                 for r in baseline["rows"]}
+    skipped = [k for k, r in base_rows.items() if r.get("interpret")]
+    for k in skipped:
+        print(f"SKIP {k}: interpret-mode placeholder, not gated")
     cfg = SimConfig(num_nodes=int(baseline.get("num_nodes", 50)),
                     seed=int(baseline.get("seed", 0)))
     samples = int(baseline.get("samples", 20))
     failures = 0
     for wl, label in (("B", "high-p-1000-4-card"), ("C", "low-p-500-2-card")):
-        ref = base_rows.get((label, "imp_batched"))
-        ref_legacy = base_rows.get((label, "imp_batched_legacy"))
-        if ref is None or not ref["p50_us"]:
-            print(f"SKIP {label}: no fused baseline row")
+        ref = base_rows.get((label, "imp_batched", "sourcing"))
+        ref_e2e = base_rows.get((label, "imp_batched", "plan_e2e"))
+        ref_legacy = base_rows.get((label, "imp_batched_legacy", "sourcing"))
+        if ref is None or not ref["p50_us"] or ref.get("interpret"):
+            print(f"SKIP {label}: no gateable fused baseline row")
             continue
         fused = run_latency_experiment(cfg, "imp_batched", wl, samples=samples)
         legacy = run_latency_experiment(cfg, "imp_batched_legacy", wl,
@@ -61,6 +72,16 @@ def main() -> int:
               f"{ratio:.2f}x) [{status}]")
         if ratio > MAX_REGRESSION:
             failures += 1
+        if ref_e2e and ref_e2e["p50_us"]:
+            e2e = run_plan_latency_experiment(cfg, "imp_batched", wl,
+                                              samples=samples)
+            e2e_p50 = p(e2e.sourcing_us, 50)
+            ratio = e2e_p50 / (ref_e2e["p50_us"] * norm)
+            status = "ok" if ratio <= MAX_REGRESSION else "REGRESSION"
+            print(f"{label}: fused plan_e2e p50 {e2e_p50:.0f}us vs baseline "
+                  f"{ref_e2e['p50_us']:.0f}us ({ratio:.2f}x) [{status}]")
+            if ratio > MAX_REGRESSION:
+                failures += 1
         if (fused.preemptions, fused.hits) != (legacy.preemptions, legacy.hits):
             print(f"FAIL {label}: fused hits {fused.hits}/{fused.preemptions} "
                   f"!= legacy {legacy.hits}/{legacy.preemptions}")

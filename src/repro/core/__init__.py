@@ -1,6 +1,6 @@
 """Core: the paper's contribution — FlexTopo + topology-aware preemption."""
 from .cluster import (MAX_DENSE_VICTIMS, Cluster, ClusterArrays, ClusterView,
-                      SourcingContext)
+                      DeviceClusterState, SourcingContext)
 from .decisions import SchedulingDecision, Transaction, TransactionError
 from .engines import (EngineName, SourcingEngine, UnknownEngineError,
                       get_engine, register_engine, registered_engines)
@@ -14,8 +14,8 @@ from .workload import (Instance, TopoPolicy, WorkloadSpec, table1_workloads,
                        table3_workloads)
 
 __all__ = [
-    "Cluster", "ClusterArrays", "ClusterView", "SourcingContext",
-    "MAX_DENSE_VICTIMS", "FlexTopo", "FlexTopoMasks",
+    "Cluster", "ClusterArrays", "ClusterView", "DeviceClusterState",
+    "SourcingContext", "MAX_DENSE_VICTIMS", "FlexTopo", "FlexTopoMasks",
     "INFEASIBLE", "Placement", "achieved_tier", "best_tier", "is_topology_hit",
     "min_tier_for", "place", "place_blind", "SchedulingDecision",
     "Transaction", "TransactionError", "EngineName", "SourcingEngine",

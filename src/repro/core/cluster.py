@@ -3,9 +3,13 @@
 The scheduler and simulator mutate cluster state exclusively through this
 class so that the FlexTopo graphs, the bitmask arrays, and the instance
 registry can never diverge.  ``arrays()`` exports the dense engine view used
-by the vectorized/Pallas preemption engines, and ``sourcing_context()``
-hands out the incrementally-maintained `SourcingContext` the fused
-single-dispatch engine reads instead of rebuilding arrays per ``plan()``.
+by the vectorized/Pallas preemption engines, ``sourcing_context()`` hands
+out the incrementally-maintained host `SourcingContext` mirror, and
+``device_state()`` hands out the `DeviceClusterState` — the struct-of-arrays
+copy of the sourcing rows that stays RESIDENT on the accelerator across
+plans.  ``invalidate_node`` marks single rows dirty in both; the device copy
+re-uploads only those rows as one ``.at[rows].set()`` scatter per sync, so a
+``plan()`` never re-uploads the whole ``[N, M]`` state host→device.
 """
 from __future__ import annotations
 
@@ -58,6 +62,7 @@ class Cluster:
         # rows refresh incrementally instead of rebuilding from instance lists
         self._dirty_listeners: list[Callable[[int], None]] = []
         self._sourcing_ctx: "SourcingContext | None" = None
+        self._device_state: "DeviceClusterState | None" = None
 
     # ---- mutation -----------------------------------------------------------------
     def bind(self, workload: WorkloadSpec, node: int, placement: Placement) -> Instance:
@@ -111,6 +116,12 @@ class Cluster:
         if self._sourcing_ctx is None:
             self._sourcing_ctx = SourcingContext(self)
         return self._sourcing_ctx
+
+    def device_state(self) -> "DeviceClusterState":
+        """The lazily-created device-resident struct-of-arrays state."""
+        if self._device_state is None:
+            self._device_state = DeviceClusterState(self)
+        return self._device_state
 
     # ---- queries --------------------------------------------------------------------
     def free_masks(self, node: int) -> tuple[int, int]:
@@ -219,6 +230,10 @@ class ClusterView:
         # virtual uid -> real uid, filled as the view's transactions commit so
         # later transactions can resolve victims planned against earlier binds
         self.committed_uids: dict[int, int] = {}
+        # per-node planned-mutation counter: lets callers (the batch
+        # sourcing session) cache row encodings across plans sharing this
+        # view and re-encode only rows a later plan actually touched
+        self._node_version: dict[int, int] = {}
 
     # -- read interface (mirrors Cluster) ------------------------------------------
     def free_masks(self, node: int) -> tuple[int, int]:
@@ -249,13 +264,23 @@ class ClusterView:
         )
 
     # -- planned mutations ----------------------------------------------------------
+    def _bump(self, node: int) -> None:
+        self._node_version[node] = self._node_version.get(node, 0) + 1
+
+    def node_version(self, node: int) -> int:
+        """Planned-mutation counter for one node (0 = untouched)."""
+        return self._node_version.get(node, 0)
+
     def plan_evict(self, uid: int) -> Instance:
         if uid in self._added:
-            return self._added.pop(uid)
+            inst = self._added.pop(uid)
+            self._bump(inst.node)
+            return inst
         inst = self.base.instances[uid]
         if uid in self._evicted:
             raise ValueError(f"uid {uid} already planned for eviction")
         self._evicted[uid] = inst
+        self._bump(inst.node)
         return inst
 
     def plan_bind(self, workload: WorkloadSpec, node: int,
@@ -263,6 +288,7 @@ class ClusterView:
         inst = Instance(uid=next(self._uid), workload=workload, node=node,
                         gpu_mask=placement.gpu_mask, cg_mask=placement.cg_mask)
         self._added[inst.uid] = inst
+        self._bump(node)
         return inst
 
     def resolve_uid(self, uid: int) -> int:
@@ -396,3 +422,227 @@ def encode_row(source, node: int, cap: int) -> VictimRow:
         uids = np.asarray([v.uid for v in victims])
         row.rank[: len(victims)] = np.argsort(np.argsort(uids))
     return row
+
+
+# ---------------------------------------------------------------------------------
+# Device-resident cluster state (struct-of-arrays on the accelerator)
+# ---------------------------------------------------------------------------------
+
+#: rows of the stacked node-state tensor (``DeviceClusterState.nodestate``)
+NODE_FIELDS = 5
+NS_FREE_GPU, NS_FREE_CG, NS_NODE_ID, NS_OVERFLOW, NS_NEXT_PRIO = range(NODE_FIELDS)
+
+#: rows of the stacked victim tensor (``DeviceClusterState.victims``)
+VICTIM_FIELDS = 5
+VF_GPU, VF_CG, VF_PRIO, VF_RANK, VF_STORED = range(VICTIM_FIELDS)
+
+#: rows of the stacked drain tensor: free ∪ every stored victim mask — the
+#: fully-drained masks Guaranteed Filtering popcounts on device
+DRAIN_FIELDS = 2
+
+#: out-of-range row index used to pad scatter/gather index vectors; dropped
+#: by ``mode="drop"`` scatters and filled with zero rows by gathers
+IDX_SENTINEL = 2**31 - 1
+
+#: largest dirty set ``sync(flush=False)`` may leave pending for
+#: in-dispatch overlay before forcing a real scatter
+MAX_PENDING_ROWS = 16
+
+
+def pack_rows(rows: list[VictimRow], node_ids, cap: int):
+    """Stack encoded `VictimRow`s into the device layout.
+
+    Returns ``(nodestate int32[NODE_FIELDS, P], victims
+    int32[VICTIM_FIELDS, P, cap], drain int32[DRAIN_FIELDS, P])`` — the same
+    column layout `DeviceClusterState` keeps resident, so view deltas can be
+    scattered straight onto the resident arrays as a device-side overlay.
+    """
+    p = len(rows)
+    ns = np.zeros((NODE_FIELDS, p), np.int32)
+    v = np.zeros((VICTIM_FIELDS, p, cap), np.int32)
+    dr = np.zeros((DRAIN_FIELDS, p), np.int32)
+    for j, (node, row) in enumerate(zip(node_ids, rows)):
+        ns[NS_FREE_GPU, j] = row.free_gpu
+        ns[NS_FREE_CG, j] = row.free_cg
+        ns[NS_NODE_ID, j] = node
+        ns[NS_OVERFLOW, j] = int(row.overflow)
+        ns[NS_NEXT_PRIO, j] = row.next_priority
+        v[VF_GPU, j] = row.vg
+        v[VF_CG, j] = row.vc
+        v[VF_PRIO, j] = row.vp
+        v[VF_RANK, j] = row.rank
+        v[VF_STORED, j] = row.stored
+        dr[0, j] = row.free_gpu | int(
+            np.bitwise_or.reduce(np.where(row.stored, row.vg, 0)))
+        dr[1, j] = row.free_cg | int(
+            np.bitwise_or.reduce(np.where(row.stored, row.vc, 0)))
+    return ns, v, dr
+
+
+def pack_context_rows(ctx: "SourcingContext", idx):
+    """Vectorized `pack_rows` over `SourcingContext` rows ``idx``."""
+    idx = np.asarray(idx, np.int64)
+    ns = np.zeros((NODE_FIELDS, len(idx)), np.int32)
+    ns[NS_FREE_GPU] = ctx.free_gpu[idx]
+    ns[NS_FREE_CG] = ctx.free_cg[idx]
+    ns[NS_NODE_ID] = idx
+    ns[NS_OVERFLOW] = ctx.overflow[idx]
+    ns[NS_NEXT_PRIO] = ctx.next_prio[idx]
+    stored = ctx.stored[idx]
+    v = np.stack([
+        ctx.vg[idx], ctx.vc[idx], ctx.vp[idx], ctx.rank[idx],
+        stored.astype(np.int32),
+    ]).astype(np.int32)
+    dr = np.zeros((DRAIN_FIELDS, len(idx)), np.int32)
+    dr[0] = ctx.free_gpu[idx] | np.bitwise_or.reduce(
+        np.where(stored, ctx.vg[idx], 0), axis=1)
+    dr[1] = ctx.free_cg[idx] | np.bitwise_or.reduce(
+        np.where(stored, ctx.vc[idx], 0), axis=1)
+    return ns, v, dr
+
+
+def flatten_rows(ns, v, dr) -> np.ndarray:
+    """Concatenate packed rows into ONE int32 row-major buffer.
+
+    Host→device traffic on the plan hot path is dominated by per-array
+    upload overhead, not bytes — dirty-row scatters and view-delta patches
+    therefore travel as a single ``int32[P, NODE_FIELDS + VICTIM_FIELDS*cap
+    + DRAIN_FIELDS]`` buffer and are split again inside the jit."""
+    p = ns.shape[1]
+    return np.concatenate(
+        [ns.T, v.transpose(1, 0, 2).reshape(p, -1), dr.T],
+        axis=1).astype(np.int32)
+
+
+def unflatten_rows(buf, cap: int):
+    """Inverse of `flatten_rows`; works on numpy and traced jnp arrays."""
+    p = buf.shape[0]
+    ns = buf[:, :NODE_FIELDS].T
+    v = buf[:, NODE_FIELDS:NODE_FIELDS + VICTIM_FIELDS * cap]
+    v = v.reshape(p, VICTIM_FIELDS, cap).transpose(1, 0, 2)
+    dr = buf[:, NODE_FIELDS + VICTIM_FIELDS * cap:].T
+    return ns, v, dr
+
+
+def apply_rows(ns, v, dr, idx, buf):
+    """Scatter flattened rows onto the three stacked tensors (jnp ``.at``
+    semantics; `IDX_SENTINEL` pad entries are dropped).  The single shared
+    implementation behind both the resident-state scatter and the fused
+    evaluators' in-dispatch view-delta overlay."""
+    a, b, c = unflatten_rows(buf, v.shape[2])
+    return (ns.at[:, idx].set(a, mode="drop"),
+            v.at[:, idx, :].set(b, mode="drop"),
+            dr.at[:, idx].set(c, mode="drop"))
+
+
+_SCATTER_JIT = None
+
+
+def _scatter_rows(ns, v, dr, idx, buf):
+    """One jitted scatter updating every dirty row of all three tensors
+    from a single flattened upload buffer."""
+    global _SCATTER_JIT
+    if _SCATTER_JIT is None:
+        import jax
+
+        _SCATTER_JIT = jax.jit(apply_rows)
+    return _SCATTER_JIT(ns, v, dr, idx, buf)
+
+
+def _pad_pow2(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def pad_idx(ids, floor: int = 1) -> np.ndarray:
+    """Pad a row-index list to a power-of-two bucket with `IDX_SENTINEL`
+    (bounds jit-cache variants; sentinels drop out of scatters/gathers)."""
+    p = max(floor, _pad_pow2(len(ids)))
+    out = np.full(p, IDX_SENTINEL, np.int32)
+    out[: len(ids)] = ids
+    return out
+
+
+class DeviceClusterState:
+    """Device-resident struct-of-arrays view of the cluster's sourcing state.
+
+    Three stacked int32 tensors live ON DEVICE across plans:
+
+    * ``nodestate [NODE_FIELDS, N]`` — free-GPU/CG slot masks, node id,
+      overflow flag, first-unstored priority;
+    * ``victims   [VICTIM_FIELDS, N, cap]`` — per-slot victim GPU/CG masks,
+      priorities, uid-ranks, stored flags (the ``(priority, uid)``-sorted
+      rows of the host `SourcingContext` mirror);
+    * ``drain     [DRAIN_FIELDS, N]`` — per-node fully-drained masks
+      (free ∪ all stored victim masks), the popcount input of the fused
+      Guaranteed-Filtering step.
+
+    The host `SourcingContext` stays as the *mirror*: it keeps the int64
+    victim uids (decoded only for the winner) and the counts the host needs
+    for wide/overflow routing.  Both subscribe to ``invalidate_node``, so a
+    ``bind``/``evict``/``restore`` marks single rows dirty; ``sync()``
+    refreshes the mirror lazily and pushes ONLY the dirty rows to the device
+    as one ``.at[rows].set()`` scatter — no per-plan host rebuild/upload.
+    Copy-on-write `ClusterView` deltas never touch these arrays: the fused
+    evaluators overlay patch rows inside the dispatch (``pack_rows``).
+    """
+
+    def __init__(self, cluster: Cluster, cap: int | None = None) -> None:
+        self.cluster = cluster
+        self.mirror = cluster.sourcing_context()
+        if cap is not None and cap != self.mirror.cap:
+            raise ValueError("device cap must match the mirror's cap")
+        self.cap = self.mirror.cap
+        self.nodestate = None   # jnp.int32[NODE_FIELDS, N]
+        self.victims = None     # jnp.int32[VICTIM_FIELDS, N, cap]
+        self.drain = None       # jnp.int32[DRAIN_FIELDS, N]
+        #: host fast-path: when no node stores more than NARROW_M victims,
+        #: per-plan wide/overflow routing is skipped entirely
+        self.count_max = 0
+        self._dirty: set[int] = set(range(cluster.num_nodes))
+        cluster.add_dirty_listener(self._dirty.add)
+
+    def sync(self, flush: bool = True) -> "DeviceClusterState":
+        """Bring the device view up to date with the live cluster.
+
+        Dirty rows are packed host-side (O(dirty) python) and applied as a
+        single scatter; a majority-dirty state falls back to one full
+        upload.  Index vectors are padded to power-of-two buckets with
+        `IDX_SENTINEL` so the scatter jit-cache stays small.
+
+        ``flush=False`` refreshes the host mirror but leaves a SMALL dirty
+        set resident-stale in ``pending``: the fused evaluators overlay
+        those rows in-dispatch exactly like view-delta patches, saving the
+        separate scatter dispatch on the plan hot path.  Large pending sets
+        are flushed regardless so the overlay bucket stays small.
+        """
+        import jax.numpy as jnp
+
+        self.mirror.refresh()
+        n = self.cluster.num_nodes
+        if self.nodestate is None or 2 * len(self._dirty) >= max(n, 2):
+            ns, v, dr = pack_context_rows(self.mirror, np.arange(n))
+            self.nodestate = jnp.asarray(ns)
+            self.victims = jnp.asarray(v)
+            self.drain = jnp.asarray(dr)
+            self._dirty.clear()
+        elif self._dirty and (flush or len(self._dirty) > MAX_PENDING_ROWS):
+            rows = sorted(self._dirty)
+            buf = flatten_rows(*pack_context_rows(self.mirror, rows))
+            idx = pad_idx(rows)
+            if len(idx) > len(rows):
+                buf = np.pad(buf, ((0, len(idx) - len(rows)), (0, 0)))
+            self.nodestate, self.victims, self.drain = _scatter_rows(
+                self.nodestate, self.victims, self.drain,
+                jnp.asarray(idx), jnp.asarray(buf))
+            self._dirty.clear()
+        self.count_max = int(self.mirror.count.max()) if n else 0
+        return self
+
+    @property
+    def pending(self) -> set[int]:
+        """Rows whose device copy is stale (mirror is fresh after sync):
+        deferred by ``sync(flush=False)`` for in-dispatch overlay."""
+        return self._dirty

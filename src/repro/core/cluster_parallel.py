@@ -17,8 +17,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from .cluster import (DRAIN_FIELDS, NODE_FIELDS, NS_NODE_ID, VICTIM_FIELDS)
 from .preemption_jax import (Request, _evaluate_subsets_core,
-                             _fused_select_core, combo_table, spec_constants)
+                             _fused_argmax_core, _fused_class_core,
+                             combo_table, spec_constants)
 from .scoring import TIER_SCORES
 from .topology import ServerSpec
 
@@ -126,25 +128,35 @@ def make_distributed_fused_source(
     alpha: float = 0.5,
     m: int = 8,
 ):
-    """jit the fused all-sizes evaluator (``preemption_jax.imp_batched``
-    semantics: per-node smallest-k + global Eq. 2 argmax in one program)
-    with the node axis sharded over every mesh axis.
+    """jit the fused Filtering+Sorting evaluator (``imp_batched`` semantics:
+    drain-mask Guaranteed Filtering, per-node smallest-k, global Eq. 2
+    argmax in one program) over the DEVICE-RESIDENT layout
+    (`DeviceClusterState`: nodestate/victims/drain tensors) with the node
+    axis sharded over every mesh axis.
 
-    The per-node subset evaluation and class reductions stay local to each
-    device's node shard; only the final argmax chain over the ``[N, 3]``
-    class winners crosses shards, which XLA lowers to all-reduce
-    collectives — the device→host traffic is seven scalars regardless of
-    cluster size.
+    The per-node filtering popcounts, subset evaluation and class
+    reductions stay local to each device's node shard; only the final
+    argmax chain over the ``[N, 3]`` class winners crosses shards, which
+    XLA lowers to all-reduce collectives — the device→host traffic is seven
+    scalars regardless of cluster size.
     """
     axes = tuple(mesh.axis_names)
     node_sharding = NamedSharding(mesh, P(None, axes))   # shard node axis 1
     victim_sharding = NamedSharding(mesh, P(None, axes, None))
     repl = NamedSharding(mesh, P())
-    fn = partial(_fused_select_core, spec=spec, request=request,
-                 alpha=alpha, m=m)
+
+    def fn(nodestate, victims, drain, thresh):
+        cls = _fused_class_core(
+            nodestate, victims, drain, thresh,
+            jnp.int32(request.need_gpus), jnp.int32(request.need_cgs),
+            jnp.int32(request.cgs_per_bundle), jnp.float32(alpha),
+            spec=spec, m=m, narrow_gate=True)
+        return _fused_argmax_core(nodestate[NS_NODE_ID], cls,
+                                  jnp.float32(alpha))
+
     return jax.jit(
         fn,
-        in_shardings=(node_sharding, victim_sharding, repl),
+        in_shardings=(node_sharding, victim_sharding, node_sharding, repl),
         out_shardings=repl,
     )
 
@@ -155,22 +167,25 @@ def distributed_fused_inputs(
     m: int,
     rng: np.random.Generator | None = None,
 ):
-    """Synthesize the stacked dense inputs for the fused sharded sourcing.
+    """Synthesize device-resident-layout inputs for the sharded sourcing.
 
     One GPU/CoreGroup per victim slot keeps the disjoint-mask invariant the
-    fused fold relies on (real inputs come from `SourcingContext` rows).
+    fused fold relies on (real inputs are `DeviceClusterState` tensors).
     """
     rng = rng or np.random.default_rng(0)
-    nodestate = np.zeros((3, num_nodes), np.int32)
-    nodestate[2] = np.arange(num_nodes, dtype=np.int32)
-    victims = np.zeros((5, num_nodes, m), np.int32)
+    nodestate = np.zeros((NODE_FIELDS, num_nodes), np.int32)
+    nodestate[NS_NODE_ID] = np.arange(num_nodes, dtype=np.int32)
+    victims = np.zeros((VICTIM_FIELDS, num_nodes, m), np.int32)
     victims[0] = 1 << (np.arange(m, dtype=np.int32) % spec.num_gpus)
     victims[1] = 1 << (np.arange(m, dtype=np.int32) % spec.num_coregroups)
     victims[2] = rng.integers(100, 600, (num_nodes, m), dtype=np.int32)
     victims[3] = np.arange(m, dtype=np.int32)
     victims[4] = 1
+    drain = np.zeros((DRAIN_FIELDS, num_nodes), np.int32)
+    drain[0] = nodestate[0] | np.bitwise_or.reduce(victims[0], axis=1)
+    drain[1] = nodestate[1] | np.bitwise_or.reduce(victims[1], axis=1)
     thresh = np.int32(1000)
-    return (nodestate, victims, thresh)
+    return (nodestate, victims, drain, thresh)
 
 
 def lower_distributed_fused_source(

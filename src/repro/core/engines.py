@@ -74,11 +74,33 @@ class EngineSpec:
     topology_aware: bool = True
     selector: Callable | None = None        # fn(candidates, alpha) -> Candidate
     needs_alpha: bool = False               # source_nodes takes alpha= (fused)
+    #: the engine runs Guaranteed Filtering inside its own dispatch: the
+    #: scheduler skips the host filter loop and calls ``source_all`` with
+    #: ``nodes=None`` (evaluate the whole cluster)
+    fused_filter: bool = False
+    #: fn(cluster, workloads, alpha) -> batch-sourcing session for
+    #: ``plan_batch`` (one vmapped dispatch over the request axis); the
+    #: session's ``source(view, workload, i)`` replaces ``source_all``
+    batch_factory: Callable | None = None
+    #: fn(cluster, alpha): pre-compile the engine's jit buckets at
+    #: ``TopoScheduler(..., warmup=True)`` construction
+    warmup_fn: Callable | None = None
 
     def source(self, cluster, workload, node: int) -> list[Candidate]:
         if self.source_node is not None:
             return list(self.source_node(cluster, workload, node))
         return self.source_all(cluster, workload, [node])
+
+    def start_batch(self, cluster, workloads, alpha: float):
+        """A batch-sourcing session for ``plan_batch``, or None."""
+        if self.batch_factory is None:
+            return None
+        return self.batch_factory(cluster, workloads, alpha)
+
+    def warmup(self, cluster, alpha: float) -> None:
+        """Pre-compile jit buckets (no-op for engines without warmup_fn)."""
+        if self.warmup_fn is not None:
+            self.warmup_fn(cluster, alpha)
 
     def source_all(self, cluster, workload, nodes: list[int],
                    alpha: float | None = None) -> list[Candidate]:
@@ -127,6 +149,9 @@ def register_engine(
     topology_aware: bool = True,
     selector: Callable | None = None,
     needs_alpha: bool = False,
+    fused_filter: bool = False,
+    batch_factory: Callable | None = None,
+    warmup_fn: Callable | None = None,
 ):
     """Decorator: register a sourcing function (or a full engine object).
 
@@ -134,8 +159,12 @@ def register_engine(
     ``(cluster, workload, nodes)`` with ``batched=True`` — and return
     `Candidate` lists.  ``needs_alpha=True`` marks a batched function whose
     signature ends in ``alpha=`` because it fuses the Eq. 2 selection into
-    sourcing (``imp_batched``).  Objects already satisfying `SourcingEngine`
-    are registered as-is.
+    sourcing (``imp_batched``).  ``fused_filter=True`` additionally fuses
+    Guaranteed Filtering into the dispatch: the scheduler stops filtering on
+    the host and passes ``nodes=None``.  ``batch_factory`` and ``warmup_fn``
+    wire the ``plan_batch`` vmapped session and the opt-in jit warm-up (see
+    `EngineSpec`).  Objects already satisfying `SourcingEngine` are
+    registered as-is.
     """
 
     def deco(obj):
@@ -149,6 +178,9 @@ def register_engine(
                 topology_aware=topology_aware,
                 selector=selector,
                 needs_alpha=needs_alpha,
+                fused_filter=fused_filter,
+                batch_factory=batch_factory,
+                warmup_fn=warmup_fn,
             )
         _LAZY.pop(name, None)
         return obj

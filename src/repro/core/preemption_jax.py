@@ -10,18 +10,27 @@ is also what ``cluster_parallel`` shard_maps across the device mesh.
 
 Two cluster-wide engines share the math:
 
-* ``imp_batched`` (default, *fused*): ONE jit dispatch per victim-bucket
-  group evaluates every subset of every size — a subset is its slot-bitmask
-  id, so ``k`` is just ``popcount(id)`` — and the per-node
-  smallest-feasible-``k`` plus the global Eq. 2 argmax reduce on device.
-  In the common case (all nodes <= 8 victims) that is exactly one dispatch;
-  only the winner's indices (a handful of scalars) cross back to the host,
-  and the padded victim rows come from the cluster's
-  incrementally-maintained `SourcingContext`.
+* ``imp_batched`` (default, *fused*): ONE jit dispatch over the cluster's
+  DEVICE-RESIDENT state (`DeviceClusterState`) runs Guaranteed Filtering
+  (full-drain popcount feasibility), every victim subset of every size — a
+  subset is its slot-bitmask id, so ``k`` is just ``popcount(id)`` — and the
+  per-node smallest-feasible-``k`` plus the global Eq. 2 argmax.  No node
+  list crosses host→device: the scheduler skips its host Filtering loop
+  entirely (``fused_filter``), copy-on-write `ClusterView` deltas are
+  overlaid inside the dispatch as scattered patch rows, and only the
+  winner's indices (an ``int32[7]``) cross back.  Nodes with more than
+  `NARROW_M` eligible victims are gated out in-device and re-dispatched
+  through chunked 2^16-subset programs fed device-side gather indices.
 * ``imp_batched_legacy``: the original multi-dispatch sweep (one jit call
   per subset size, full ``[N, n_comb]`` tier/priority transfers, python
   Candidate construction).  Kept for parity testing and as the reference
   for the fused path's semantics.
+
+``plan_batch`` requests ride a `BatchSourcingSession`: one *vmapped*
+dispatch evaluates ALL requests' per-node class winners against one
+snapshot, and the sequential planned-eviction semantics are preserved by
+masking each plan's delta nodes out of the precomputed tensors on device
+and re-sourcing only those rows against the view.
 
 Tier convention matches ``placement.best_tier``:
 0 = single NUMA, 1 = single socket, 2 = cross-socket, 3 = infeasible.
@@ -30,12 +39,19 @@ from __future__ import annotations
 
 import dataclasses
 from functools import lru_cache, partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .cluster import MAX_DENSE_VICTIMS, Cluster, encode_row
+from .cluster import (DRAIN_FIELDS, IDX_SENTINEL, MAX_DENSE_VICTIMS,
+                      NODE_FIELDS, NS_FREE_CG, NS_FREE_GPU, NS_NEXT_PRIO,
+                      NS_NODE_ID, NS_OVERFLOW, VF_CG, VF_GPU, VF_PRIO,
+                      VF_RANK, VF_STORED, VICTIM_FIELDS, Cluster,
+                      DeviceClusterState, VictimRow, _pad_pow2, apply_rows,
+                      encode_row, flatten_rows, pack_context_rows, pack_rows,
+                      pad_idx, unflatten_rows)
 from .engines import register_engine
 from .scoring import DEFAULT_ALPHA, TIER_SCORES, Candidate
 from .topology import ServerSpec
@@ -369,61 +385,140 @@ def flextopo_imp_vectorized(cluster: Cluster, workload: WorkloadSpec, node: int
 #
 # A victim subset is its slot-bitmask id c in [0, 2^m): member slots are the
 # set bits of c and the subset size is popcount(c), so every size k=0..m is
-# evaluated in ONE device program with no ragged tables.  The program also
-# reduces to the final Eq. 2 winner on device, reproducing
-# `scoring.select_best`'s ordering:
+# evaluated in ONE device program with no ragged tables.  The same program
+# runs Guaranteed Filtering first — the fully-drained masks kept resident in
+# `DeviceClusterState.drain` go through the identical popcount tier math, and
+# nodes whose drain state is infeasible contribute no candidates (which is
+# exactly the host filter's semantics: a subset is feasible only if the
+# full drain is) — then reduces to the final Eq. 2 winner on device,
+# reproducing `scoring.select_best`'s ordering:
 #
 #   maximize  (Eq. 1 score, fewer victims, lower node id,
 #              lexicographically smallest sorted victim-uid tuple)
 #
 # The uid tie-break uses the rank trick: slot j's uid-rank r_j (from the
-# SourcingContext) contributes bit (m-1-r_j) to a combo "uid mask", and for
-# equal-size subsets of one node, larger uid mask == lexicographically
-# smaller sorted uid tuple.  Scores are compared in f32 on device with an
-# exact integer priority-sum refinement between ties, which matches the
-# host's f64 ordering whenever distinct candidate scores are at least a few
-# f32 ulps apart — true for realistic priority scales (the per-class gap is
-# alpha*|1/p1 - 1/p2| >= alpha/p^2 which stays above f32 resolution for
-# priorities up to tens of thousands); `imp_batched_legacy` keeps the exact
-# host-side semantics for adversarial inputs.
+# SourcingContext mirror) contributes bit (cap-1-r_j) to a combo "uid mask",
+# and for equal-size subsets of one node, larger uid mask ==
+# lexicographically smaller sorted uid tuple.  Scores are compared in f32 on
+# device with an exact integer priority-sum refinement between ties, which
+# matches the host's f64 ordering whenever distinct candidate scores are at
+# least a few f32 ulps apart — true for realistic priority scales (the
+# per-class gap is alpha*|1/p1 - 1/p2| >= alpha/p^2 which stays above f32
+# resolution for priorities up to tens of thousands); `imp_batched_legacy`
+# keeps the exact host-side semantics for adversarial inputs.
+#
+# The preemptor's resource ask is DYNAMIC (traced int32 scalars), so one
+# compiled program serves every workload class — jit variants are keyed only
+# by (spec, victim-slot width m, patch bucket p).
 
 _INT32_MAX = np.int32(2**31 - 1)
 
-# rows of the stacked fused inputs (see `_fused_select_core`)
-NODE_FIELDS = 3      # free_gpu, free_cg, node_id
-VICTIM_FIELDS = 5    # gpu_mask, cg_mask, priority, uid_rank, stored
+#: victim-slot width of the resident single-dispatch program; nodes with
+#: more eligible victims are gated out in-device and re-dispatched wide
+NARROW_M = 8
 
 
-def _fused_select_core(
-    nodestate: jnp.ndarray,  # int32[3, N]: free_gpu | free_cg | node_id
-    victims: jnp.ndarray,    # int32[5, N, m]: gpu | cg | prio | rank | stored
-    thresh: jnp.ndarray,     # int32[]     preemptor priority
+def _tier_from_counts_dyn(cnt_gpu, cnt_cg, sock_onehot,
+                          need_gpus, need_cgs, cgs_per_bundle):
+    """`_tier_from_counts` with the request as traced int32 scalars.
+
+    One compiled program serves every preemptor class: ``cgs_per_bundle``
+    = 0 encodes both "no bundle locality" and CPU-only asks (with
+    ``need_gpus`` = 0 the GPU-unit comparisons are trivially true, leaving
+    exactly the static version's CoreGroup-only conditions).
+    """
+    units = jnp.where(cgs_per_bundle > 0,
+                      jnp.minimum(cnt_gpu,
+                                  cnt_cg // jnp.maximum(cgs_per_bundle, 1)),
+                      cnt_gpu)
+    numa_ok = jnp.any((units >= need_gpus) & (cnt_cg >= need_cgs), axis=-1)
+    sock_units = units @ sock_onehot
+    sock_cg = cnt_cg @ sock_onehot
+    sock_ok = jnp.any((sock_units >= need_gpus) & (sock_cg >= need_cgs),
+                      axis=-1)
+    glob_ok = (jnp.sum(units, axis=-1) >= need_gpus) & (
+        jnp.sum(cnt_cg, axis=-1) >= need_cgs)
+    return jnp.where(numa_ok, 0, jnp.where(sock_ok, 1,
+                                           jnp.where(glob_ok, 2, 3)))
+
+
+class ClassWinners(NamedTuple):
+    """Per-(node, tier) class-winner tensors produced by `_fused_class_core`.
+
+    ``anyc[N, 3]`` marks classes holding at least one min-k feasible subset;
+    ``cb``/``pp``/``um`` are the class winner's combo id, priority sum, and
+    uid-rank mask; ``k_node[N]`` is each node's smallest feasible subset
+    size and ``cnt[N]`` its feasible min-k subset count (the legacy
+    engine's candidate count)."""
+
+    anyc: jnp.ndarray
+    cb: jnp.ndarray
+    pp: jnp.ndarray
+    um: jnp.ndarray
+    k_node: jnp.ndarray
+    cnt: jnp.ndarray
+
+
+def _fused_class_core(
+    nodestate: jnp.ndarray,  # int32[NODE_FIELDS, N]
+    victims: jnp.ndarray,    # int32[VICTIM_FIELDS, N, >= m]
+    drain: jnp.ndarray,      # int32[DRAIN_FIELDS, N] fully-drained masks
+    thresh: jnp.ndarray,     # int32[]  preemptor priority
+    need_gpus: jnp.ndarray,  # int32[]
+    need_cgs: jnp.ndarray,   # int32[]
+    cgs_per_bundle: jnp.ndarray,  # int32[] (0 = no bundle locality)
+    alpha: jnp.ndarray,      # f32[]    Eq. 1 weight
     *,
     spec: ServerSpec,
-    request: Request,
-    alpha: float,
     m: int,
-):
-    """Evaluate all 2^m victim subsets of N nodes and reduce to the Eq. 2
-    winner in one program.
+    narrow_gate: bool,
+) -> ClassWinners:
+    """Filtering + all-2^m-subset evaluation + per-(node, tier) reduction.
 
-    Inputs arrive as two stacked tensors (one host→device transfer each).
+    Guaranteed Filtering runs first on the resident ``drain`` masks — the
+    same popcount tier math over the fully-drained state; filtered-out
+    nodes contribute nothing (their subsets could never be feasible, so
+    this is bitwise-identical to the scheduler's host filter).  With
+    ``narrow_gate`` the program additionally gates out rows whose ELIGIBLE
+    victims (priority < preemptor, always a prefix of the sorted row)
+    exceed ``m`` slots, and truncated rows whose eligible victims extend
+    past the stored prefix — the host re-dispatches those wide/overflow.
+
     Victim masks of one node are pairwise disjoint and disjoint from the
     free mask (the allocator guarantees it), so every per-subset fold —
-    freed-GPU/CG masks, priority sum, and the uid-rank tie-break mask — is a
-    single int32 matmul against the static subset-membership bit table
-    instead of an unrolled OR loop.  Padding rows use node_id = INT32_MAX
-    and stored = 0 and can never win.
-
-    Returns int32[7]: (found, row, tier, combo_id, prio_sum, k,
-    n_candidates): ``row`` indexes the input batch, ``combo_id``'s set bits
-    are the winning victim slots, and ``n_candidates`` counts the feasible
-    subsets at each node's own smallest feasible size (the legacy engine's
-    candidate count).
+    freed-GPU/CG masks, priority sum, and the uid-rank tie-break mask — is
+    a single int32 matmul against the static subset-membership bit table.
+    Rows with node_id = INT32_MAX (gather/pad sentinels) can never win.
     """
-    free_gpu, free_cg, node_ids = nodestate[0], nodestate[1], nodestate[2]
-    vg, vc, vp, rank = victims[0], victims[1], victims[2], victims[3]
-    stored = victims[4] != 0
+    free_gpu = nodestate[NS_FREE_GPU]
+    free_cg = nodestate[NS_FREE_CG]
+    node_ids = nodestate[NS_NODE_ID]
+    vp_full = victims[VF_PRIO]
+    stored_full = victims[VF_STORED] != 0
+    vg = victims[VF_GPU, :, :m]
+    vc = victims[VF_CG, :, :m]
+    vp = vp_full[:, :m]
+    rank = victims[VF_RANK, :, :m]
+    stored = stored_full[:, :m]
+
+    consts = spec_constants(spec)
+    numa_g = consts["numa_gpu_masks"]
+    numa_c = consts["numa_cg_masks"]
+    sock_onehot = consts["sock_onehot"]
+
+    # ---- Guaranteed Filtering, fused: popcounts over the drain masks ------------
+    dcnt_g = jax.lax.population_count(drain[0][:, None] & numa_g[None, :])
+    dcnt_c = jax.lax.population_count(drain[1][:, None] & numa_c[None, :])
+    drain_tier = _tier_from_counts_dyn(dcnt_g, dcnt_c, sock_onehot,
+                                       need_gpus, need_cgs, cgs_per_bundle)
+    node_ok = (drain_tier < 3) & (node_ids < _INT32_MAX)
+    if narrow_gate:
+        elig_full = jnp.sum((stored_full & (vp_full < thresh))
+                            .astype(jnp.int32), axis=1)
+        overflow = nodestate[NS_OVERFLOW] != 0
+        next_prio = nodestate[NS_NEXT_PRIO]
+        node_ok &= (elig_full <= m) & ~(overflow & (next_prio < thresh))
+
     n_comb = 1 << m
     cids = jnp.arange(n_comb, dtype=jnp.int32)
     kk = jax.lax.population_count(cids)                       # [n_comb]
@@ -435,7 +530,8 @@ def _fused_select_core(
     slot_bits = jnp.left_shift(
         jnp.int32(1), jnp.arange(m, dtype=jnp.int32))         # [m]
     valid_mask = valid_slot.astype(jnp.int32) @ slot_bits      # [N]
-    combo_ok = (cids[None, :] & ~valid_mask[:, None]) == 0     # [N, n_comb]
+    combo_ok = ((cids[None, :] & ~valid_mask[:, None]) == 0    # [N, n_comb]
+                ) & node_ok[:, None]
 
     # all per-subset folds in one [4, N, m] @ [m, n_comb] contraction.
     # rank bits use the full cap width: truncated rows carry uid-ranks over
@@ -449,17 +545,13 @@ def _fused_select_core(
     prio_sum = sums[2]
     umask = sums[3]
 
-    # per-NUMA availability: popcount(freed & numa_mask) -> [N, n_comb, U];
-    # SKU constants shared with the legacy evaluator
-    consts = spec_constants(spec)
-    numa_g = consts["numa_gpu_masks"]
-    numa_c = consts["numa_cg_masks"]
-    sock_onehot = consts["sock_onehot"]
+    # per-NUMA availability: popcount(freed & numa_mask) -> [N, n_comb, U]
     cnt_gpu = jax.lax.population_count(
         combo_gpu[:, :, None] & numa_g[None, None, :])
     cnt_cg = jax.lax.population_count(
         combo_cg[:, :, None] & numa_c[None, None, :])
-    tier = _tier_from_counts(cnt_gpu, cnt_cg, sock_onehot, request)
+    tier = _tier_from_counts_dyn(cnt_gpu, cnt_cg, sock_onehot,
+                                 need_gpus, need_cgs, cgs_per_bundle)
     tier = jnp.where(combo_ok, tier, 3).astype(jnp.int32)
 
     # ---- per-node smallest feasible k (IMP early stop, on device) ---------------
@@ -467,13 +559,13 @@ def _fused_select_core(
     big_k = jnp.int32(m + 1)
     k_node = jnp.min(jnp.where(feasible, kk[None, :], big_k), axis=1)   # [N]
     atmin = feasible & (kk[None, :] == k_node[:, None])
-    n_candidates = jnp.sum(atmin.astype(jnp.int32))
+    cnt = jnp.sum(atmin.astype(jnp.int32), axis=1)             # [N]
 
     # ---- per-(node, tier) winner via exact integer keys -------------------------
     # within one node all candidates share k, so the Eq. 2 order inside a
     # (node, tier) class is: smaller priority sum (when alpha > 0), then the
     # uid tie-break (always) — tensorized over the three tier classes.
-    p_eff = prio_sum if alpha > 0 else jnp.zeros_like(prio_sum)
+    p_eff = jnp.where(alpha > 0, prio_sum, 0)
     big_p = jnp.int32(_INT32_MAX)
     t3 = jnp.arange(3, dtype=jnp.int32)
     sel = atmin[:, :, None] & (tier[:, :, None] == t3)         # [N, n_comb, 3]
@@ -484,9 +576,19 @@ def _fused_select_core(
     sel = sel & (umask[:, :, None] == umax[:, None, :])
     cb = jnp.argmax(sel, axis=1).astype(jnp.int32)             # [N, 3]
     pp = jnp.take_along_axis(prio_sum, cb, axis=1)             # [N, 3]
-    ppe = pp if alpha > 0 else jnp.zeros_like(pp)
+    um = jnp.take_along_axis(umask, cb, axis=1)
+    return ClassWinners(anyc=anyc, cb=cb, pp=pp, um=um, k_node=k_node,
+                        cnt=cnt)
 
-    # ---- global Eq. 2 argmax over the <= 3N class winners -----------------------
+
+def _fused_argmax_core(node_ids, cls: ClassWinners, alpha):
+    """Global Eq. 2 argmax over the <= 3N class winners.
+
+    Returns int32[7]: (found, row, tier, combo_id, prio_sum, k,
+    n_candidates): ``row`` indexes the class tensors' node axis and
+    ``combo_id``'s set bits are the winning victim slots.
+    """
+    anyc, cb, pp, um, k_node, cnt = cls
     tier_vals = jnp.asarray(tuple(TIER_SCORES), jnp.float32)
     prio_term = jnp.where(pp > 0,
                           1.0 / jnp.maximum(pp, 1).astype(jnp.float32), 1.0)
@@ -503,43 +605,171 @@ def _fused_select_core(
     # cross-tier pair whose f64 scores differ by less than f32 resolution —
     # that needs single-digit priority sums; `imp_batched_legacy` keeps
     # exact host-side semantics for such adversarial inputs.
+    big_p = jnp.int32(_INT32_MAX)
+    t3 = jnp.arange(3, dtype=jnp.int32)
+    ppe = jnp.where(alpha > 0, pp, 0)
     tcol = jnp.broadcast_to(t3[None, :], sel.shape)
     same_tier = (jnp.min(jnp.where(sel, tcol, 3))
                  == jnp.max(jnp.where(sel, tcol, -1)))
     ppe_key = jnp.where(same_tier, ppe, 0)
     sel = sel & (ppe_key == jnp.min(jnp.where(sel, ppe_key, big_p)))
     kn = jnp.broadcast_to(k_node[:, None], sel.shape)
-    sel = sel & (kn == jnp.min(jnp.where(sel, kn, big_k)))
+    sel = sel & (kn == jnp.min(jnp.where(sel, kn, big_p)))
     nid = jnp.broadcast_to(node_ids[:, None], sel.shape)
     sel = sel & (nid == jnp.min(jnp.where(sel, nid, big_p)))
-    um = jnp.take_along_axis(umask, cb, axis=1)
     sel = sel & (um == jnp.max(jnp.where(sel, um, -1)))
     flat = jnp.argmax(sel.reshape(-1)).astype(jnp.int32)
     row = flat // 3
     return jnp.stack([
         jnp.any(anyc).astype(jnp.int32),     # found
-        row,                                 # batch row of the winner
+        row,                                 # node-axis row of the winner
         flat % 3,                            # tier
         cb.reshape(-1)[flat],                # combo id (victim-slot bitmask)
         pp.reshape(-1)[flat],                # priority sum
         k_node[row],                         # subset size
-        n_candidates,
+        jnp.sum(cnt),                        # n_candidates
     ])
 
 
+def _overlay(nodestate, victims, drain, pidx, pbuf):
+    """Apply flattened view-delta patch rows as a device-side overlay
+    (the traced twin of the resident-state scatter)."""
+    return apply_rows(nodestate, victims, drain, pidx, pbuf)
+
+
+def _plan_pipeline(nodestate, victims, drain, aux, pbuf,
+                   thresh, ng, nc, cpb, alpha, *, spec, m, p, g):
+    """The whole plan as one traced pipeline: overlay ``p`` patch rows
+    (view deltas + unflushed dirty rows), Filtering → subset evaluation →
+    per-(node, tier) reduction at slot width ``m`` over ALL nodes, a
+    gathered `NARROW_M`-wide pass over the ``g`` mid-tier rows whose
+    eligible victims exceed ``m``, and the global Eq. 2 argmax — a single
+    dispatch and a single int32[7] readback per plan.  ``aux`` carries the
+    patch and gather indices in one upload (``aux[:p]`` = patch rows,
+    ``aux[p:]`` = gather rows)."""
+    if p:
+        nodestate, victims, drain = _overlay(nodestate, victims, drain,
+                                             aux[:p], pbuf)
+    cls = _fused_class_core(nodestate, victims, drain, thresh, ng, nc,
+                            cpb, alpha, spec=spec, m=m, narrow_gate=True)
+    node_ids = nodestate[NS_NODE_ID]
+    if g:
+        gidx = aux[p:]
+        ns = jnp.take(nodestate, gidx, axis=1, mode="fill", fill_value=0)
+        vv = jnp.take(victims, gidx, axis=1, mode="fill", fill_value=0)
+        dd = jnp.take(drain, gidx, axis=1, mode="fill", fill_value=0)
+        ns = ns.at[NS_NODE_ID].set(gidx)
+        cls_g = _fused_class_core(ns, vv, dd, thresh, ng, nc, cpb,
+                                  alpha, spec=spec, m=NARROW_M,
+                                  narrow_gate=False)
+        cls = ClassWinners(*(jnp.concatenate([a, b])
+                             for a, b in zip(cls, cls_g)))
+        node_ids = jnp.concatenate([node_ids, ns[NS_NODE_ID]])
+    return _fused_argmax_core(node_ids, cls, alpha)
+
+
 @lru_cache(maxsize=None)
-def fused_evaluator(spec: ServerSpec, request: Request, alpha: float, m: int):
-    """jit of the fused evaluator with SKU constants baked in."""
-    return jax.jit(partial(_fused_select_core, spec=spec, request=request,
-                           alpha=alpha, m=m))
+def resident_evaluator(spec: ServerSpec, m: int, p: int, g: int,
+                       thresh: int, ng: int, nc: int, cpb: int,
+                       alpha: float):
+    """jit of `_plan_pipeline` with the REQUEST BAKED IN as python scalars.
+
+    Single-request plans specialize per (preemptor class, alpha) so XLA
+    constant-folds the unused tier branches and the Eq. 1 weighting —
+    measurably cheaper per dispatch than the traced-scalar variant, and
+    workload classes are few so the jit cache stays small.  The vmapped
+    `batch_class_evaluator` keeps the request dynamic (it is the vmap
+    axis)."""
+
+    def f(nodestate, victims, drain, aux, pbuf):
+        return _plan_pipeline(nodestate, victims, drain, aux, pbuf,
+                              thresh, ng, nc, cpb, alpha,
+                              spec=spec, m=m, p=p, g=g)
+
+    return jax.jit(f)
 
 
-def _pad_rows(n: int) -> int:
-    """Pad the node axis to a few buckets so jit caches stay warm."""
-    b = 8
-    while b < n:
-        b *= 2
-    return b
+@lru_cache(maxsize=None)
+def gathered_evaluator(spec: ServerSpec, m: int, p: int,
+                       thresh: int, ng: int, nc: int, cpb: int,
+                       alpha: float):
+    """jit: patch overlay, then DEVICE-SIDE gather of the rows named by
+    ``gidx`` (wide nodes, or a batch plan's delta nodes) and the fused
+    pipeline over just those rows, request baked in as in
+    `resident_evaluator`.  ``IDX_SENTINEL`` entries gather zero rows whose
+    sentinel node id can never win."""
+
+    def f(nodestate, victims, drain, pidx, pbuf, gidx):
+        if p:
+            nodestate, victims, drain = _overlay(nodestate, victims, drain,
+                                                 pidx, pbuf)
+        ns = jnp.take(nodestate, gidx, axis=1, mode="fill", fill_value=0)
+        vv = jnp.take(victims, gidx, axis=1, mode="fill", fill_value=0)
+        dd = jnp.take(drain, gidx, axis=1, mode="fill", fill_value=0)
+        ns = ns.at[NS_NODE_ID].set(gidx)
+        cls = _fused_class_core(ns, vv, dd, thresh, ng, nc, cpb, alpha,
+                                spec=spec, m=m, narrow_gate=False)
+        return _fused_argmax_core(ns[NS_NODE_ID], cls, alpha)
+
+    return jax.jit(f)
+
+
+@lru_cache(maxsize=None)
+def batch_class_evaluator(spec: ServerSpec, m: int, alpha: float):
+    """jit(vmap) of the class core over a REQUEST axis: one dispatch
+    computes every request's per-node class winners against one snapshot.
+    The request scalars are the vmap axis (necessarily dynamic); alpha is
+    shared across the batch and baked in."""
+
+    def f(nodestate, victims, drain, thresh, ng, nc, cpb):
+        return _fused_class_core(nodestate, victims, drain, thresh, ng, nc,
+                                 cpb, alpha, spec=spec, m=m,
+                                 narrow_gate=True)
+
+    return jax.jit(jax.vmap(f, in_axes=(None, None, None, 0, 0, 0, 0)))
+
+
+@lru_cache(maxsize=None)
+def batch_merge_evaluator(spec: ServerSpec, m: int, dpad: int, g: int,
+                          thresh: int, ng: int, nc: int, cpb: int,
+                          alpha: float):
+    """Per-request device merge for the batch session, ONE dispatch.
+
+    Masks the plan's ``dpad`` delta rows out of request ``i``'s precomputed
+    class tensors, overlays the patched delta rows, gathers ``g`` rows —
+    the dense delta rows AND the untouched mid-tier rows the class data's
+    gate excluded — and evaluates them at slot width ``m``, then runs the
+    global Eq. 2 argmax over everything: a batched plan whose deltas are
+    all narrow costs exactly one dispatch and one int32[7] readback, like
+    a single-request plan.  ``aux`` layout: ``[:dpad]`` mask rows, then
+    the patch rows (``pbuf`` row order matches), then the gather rows."""
+
+    def f(anyc, cb, pp, um, kn, cnt, nodestate, victims, drain, i, aux,
+          pbuf):
+        n = anyc.shape[1]
+        didx = aux[:dpad]
+        mask = jnp.ones(n, bool).at[didx].set(False, mode="drop")
+        cls = ClassWinners(anyc[i] & mask[:, None], cb[i], pp[i], um[i],
+                           kn[i], cnt[i] * mask)
+        node_ids = jnp.arange(n, dtype=jnp.int32)
+        if g:
+            p = pbuf.shape[0]
+            gidx = aux[dpad + p:]
+            nodestate, victims, drain = _overlay(nodestate, victims, drain,
+                                                 aux[dpad:dpad + p], pbuf)
+            ns = jnp.take(nodestate, gidx, axis=1, mode="fill", fill_value=0)
+            vv = jnp.take(victims, gidx, axis=1, mode="fill", fill_value=0)
+            dd = jnp.take(drain, gidx, axis=1, mode="fill", fill_value=0)
+            ns = ns.at[NS_NODE_ID].set(gidx)
+            cls_g = _fused_class_core(ns, vv, dd, thresh, ng, nc, cpb,
+                                      alpha, spec=spec, m=m,
+                                      narrow_gate=False)
+            cls = ClassWinners(*(jnp.concatenate([a, b])
+                                 for a, b in zip(cls, cls_g)))
+            node_ids = jnp.concatenate([node_ids, ns[NS_NODE_ID]])
+        return _fused_argmax_core(node_ids, cls, alpha)
+
+    return jax.jit(f)
 
 
 #: node-axis chunk size for the widest (m=16) victim bucket: keeps the
@@ -559,134 +789,410 @@ class CandidateShortlist(list):
     n_candidates: int = 0
 
 
-def _assemble_group(ctx, sel_nodes: list[int], patches: dict, m: int):
-    """Stacked dense inputs for one dispatch over ``sel_nodes`` at victim
-    bucket ``m``: (nodestate int32[3, n_pad], victims int32[5, n_pad, m],
-    uids int64[n_sel, m])."""
-    idx = np.asarray(sel_nodes, np.int64)
-    n = len(sel_nodes)
-    n_pad = _pad_rows(n)
-    nodestate = np.zeros((NODE_FIELDS, n_pad), np.int32)
-    nodestate[2] = _INT32_MAX          # pad rows: unreachable node id
-    nodestate[0, :n] = ctx.free_gpu[idx]
-    nodestate[1, :n] = ctx.free_cg[idx]
-    nodestate[2, :n] = sel_nodes
-    victims = np.zeros((VICTIM_FIELDS, n_pad, m), np.int32)
-    victims[0, :n] = ctx.vg[idx, :m]
-    victims[1, :n] = ctx.vc[idx, :m]
-    victims[2, :n] = ctx.vp[idx, :m]
-    victims[3, :n] = ctx.rank[idx, :m]
-    victims[4, :n] = ctx.stored[idx, :m]
-    uids = ctx.vu[idx, :m]
-    for pos, node in enumerate(sel_nodes):   # O(view delta) row patches
-        row = patches.get(node)
-        if row is None:
-            continue
-        nodestate[0, pos] = row.free_gpu
-        nodestate[1, pos] = row.free_cg
-        victims[0, pos] = row.vg[:m]
-        victims[1, pos] = row.vc[:m]
-        victims[2, pos] = row.vp[:m]
-        victims[3, pos] = row.rank[:m]
-        victims[4, pos] = row.stored[:m]
-        uids[pos] = row.vu[:m]
-    return nodestate, victims, uids
+def _req_scalars(spec: ServerSpec, workload: WorkloadSpec):
+    """(need_gpus, need_cgs, cgs_per_bundle) for the dynamic-request cores."""
+    ng = workload.gpus_per_instance
+    nc = workload.coregroups_per_instance(spec.coregroup_size)
+    bundle = workload.numa_policy == TopoPolicy.GUARANTEED
+    return ng, nc, (nc // ng if (bundle and ng) else 0)
 
 
-def fused_rows(cluster, workload: WorkloadSpec, nodes: list[int]):
-    """Per-dispatch input groups for ``nodes``, served from the base
-    cluster's `SourcingContext` with copy-on-write view deltas patched at
-    O(delta) cost (only changed nodes are re-encoded; the base rows are
-    never copied wholesale).
+@lru_cache(maxsize=None)
+def _empty_patch_args(cap: int):
+    """Cached zero-size device patch arrays for the p=0 (no view deltas)
+    fast path — the common case allocates nothing per plan."""
+    _, pidx, pbuf = _pack_patches({}, cap)
+    return jnp.asarray(pidx), jnp.asarray(pbuf)
 
-    Nodes are grouped by their ELIGIBLE-victim bucket so the common narrow
-    rows (<= 8 eligible victims, <= 256 subsets) never pay the wide
-    2^16-subset program: one group covers every narrow node, and nodes
-    with 9..16 eligible victims go to m=16 dispatches chunked to
-    `MAX_ROWS_WIDE` rows.  Truncated rows (> cap preemptible instances)
-    stay on the fast path while the preemptor's eligible victims fit the
-    stored prefix.  Returns (groups, overflow_nodes) with each group =
-    (sel_nodes, nodestate, victims, uids).
+
+def _patch_args(dcs: DeviceClusterState, patches: dict):
+    """One overlay buffer covering the view's delta rows (``patches``) AND
+    the device state's unflushed ``pending`` rows (``sync(flush=False)``):
+    both classes of stale row ride the same in-dispatch scatter, so the
+    plan hot path pays ONE host→device upload and zero standalone scatter
+    dispatches.  Returns host ``(p, pidx, pbuf)`` (callers upload)."""
+    cap = dcs.cap
+    width = NODE_FIELDS + VICTIM_FIELDS * cap + DRAIN_FIELDS
+    pending = sorted(set(dcs.pending) - set(patches))
+    if not patches and not pending:
+        return 0, np.zeros(0, np.int32), np.zeros((0, width), np.int32)
+    bufs, ids = [], []
+    if patches:
+        nodes = sorted(patches)
+        bufs.append(flatten_rows(
+            *pack_rows([patches[n] for n in nodes], nodes, cap)))
+        ids.extend(nodes)
+    if pending:
+        bufs.append(flatten_rows(*pack_context_rows(dcs.mirror, pending)))
+        ids.extend(pending)
+    buf = np.concatenate(bufs) if len(bufs) > 1 else bufs[0]
+    idx = _pad_idx(ids)
+    if len(idx) > len(ids):
+        buf = np.pad(buf, ((0, len(idx) - len(ids)), (0, 0)))
+    return len(idx), idx, buf
+
+
+def _pad_idx(ids, floor: int = 4) -> np.ndarray:
+    """`cluster.pad_idx` with the dispatch paths' minimum bucket of 4."""
+    return pad_idx(ids, floor)
+
+
+def _pack_patches(patches: dict[int, VictimRow], cap: int):
+    """Pack view-delta rows for the in-dispatch overlay.
+
+    Returns ``(p, pidx, pbuf)`` — one flattened int32 upload buffer (see
+    `flatten_rows`) padded to a power-of-two bucket (sentinel indices are
+    dropped by the scatter); ``p`` = 0 when there are no patches, selecting
+    the overlay-free jit variant."""
+    width = NODE_FIELDS + VICTIM_FIELDS * cap + DRAIN_FIELDS
+    if not patches:
+        return 0, np.zeros(0, np.int32), np.zeros((0, width), np.int32)
+    nodes = sorted(patches)
+    buf = flatten_rows(*pack_rows([patches[n] for n in nodes], nodes, cap))
+    idx = _pad_idx(nodes)
+    if len(idx) > len(nodes):
+        buf = np.pad(buf, ((0, len(idx) - len(nodes)), (0, 0)))
+    return len(idx), idx, buf
+
+
+class FusedSplit(NamedTuple):
+    """Host routing decision for one fused sourcing call.
+
+    ``m_res`` is the victim-slot width of the MAIN dispatch (adaptive: 4
+    when only a handful of rows hold more than 4 eligible victims — a
+    16-combo program is ~4x cheaper than the 256-combo one); ``mid`` holds
+    the rows with m_res < eligible <= `NARROW_M` (gathered m=8 chunks),
+    ``wide`` the 9..16-eligible rows (gathered 2^16-subset chunks) and
+    ``overflow`` the truncated rows whose eligible victims extend past the
+    stored prefix (per-node python fallback)."""
+
+    m_res: int
+    mid: list
+    wide: list
+    overflow: list
+
+
+#: smallest victim-slot width of the adaptive resident program
+MIN_M = 4
+
+
+def split_fused_nodes(dcs: DeviceClusterState, patches: dict, thresh: int,
+                      nodes=None, gate: int | None = None):
+    """Route rows between the main dispatch and its re-dispatch tiers.
+
+    Eligible victims are a prefix of each (priority, uid)-sorted row, so
+    every row is classified by one vectorized count over the host mirror
+    (patched rows overridden).  ``gate`` pins the main-dispatch width
+    (the batch session precomputes class data at `NARROW_M`); when None,
+    the width adapts: `MIN_M` if at most `MAX_ROWS_WIDE` rows exceed it.
+    When no node stores more than `MIN_M` victims (``dcs.count_max``) the
+    whole scan is skipped.
     """
-    base = getattr(cluster, "base", cluster)
-    ctx = base.sourcing_context()
-    ctx.refresh()
-    delta = cluster.delta_nodes() if hasattr(cluster, "delta_nodes") else ()
-    patches = {d: encode_row(cluster, d, ctx.cap)
-               for d in set(delta) & set(nodes)}
-    idx = np.asarray(nodes, np.int64)
-    thresh = workload.priority
-    # bucket by the ELIGIBLE victim count (priority < preemptor) — eligible
-    # victims are a prefix of each (priority, uid)-sorted row, so slicing to
-    # the eligible bucket keeps every victim this preemptor may evict
-    elig = ((ctx.vp[idx] < thresh) & ctx.stored[idx]).sum(axis=1)
-    trunc = ctx.overflow[idx].copy()
-    next_p = ctx.next_prio[idx].copy()
-    for pos, node in enumerate(nodes):
-        row = patches.get(node)
-        if row is not None:
-            elig[pos] = int(((row.vp < thresh) & row.stored).sum())
-            trunc[pos] = row.overflow
-            next_p[pos] = row.next_priority
-    # a truncated row falls back only if eligible victims extend past it
-    over = trunc & (next_p < thresh)
-    overflow = [n for n, o in zip(nodes, over) if o]
-    narrow = [i for i in range(len(nodes)) if not over[i] and elig[i] <= 8]
-    wide = [i for i in range(len(nodes))
-            if not over[i] and 8 < elig[i] <= MAX_DENSE_VICTIMS]
-    groups = []
-    if narrow:
-        m = _bucket(max(int(elig[narrow].max()), 1))
-        sel = [nodes[i] for i in narrow]
-        groups.append((sel,) + _assemble_group(ctx, sel, patches, m))
-    for lo in range(0, len(wide), MAX_ROWS_WIDE):
-        sel = [nodes[i] for i in wide[lo:lo + MAX_ROWS_WIDE]]
-        groups.append((sel,) + _assemble_group(ctx, sel, patches, 16))
-    return groups, overflow
+    ctx = dcs.mirror
+    patch_big = [n for n, r in patches.items() if r.count > MIN_M]
+    if dcs.count_max <= MIN_M and not patch_big:
+        return FusedSplit(MIN_M, [], [], [])
+    n = dcs.cluster.num_nodes
+    elig = ((ctx.vp < thresh) & ctx.stored).sum(axis=1)
+    bad = ctx.overflow & (ctx.next_prio < thresh)
+    for node, row in patches.items():
+        elig[node] = int(((row.vp < thresh) & row.stored).sum())
+        bad[node] = bool(row.overflow and row.next_priority < thresh)
+    if nodes is None:
+        allowed = np.ones(n, bool)
+    else:
+        allowed = np.zeros(n, bool)
+        allowed[list(nodes)] = True
+    ok = allowed & ~bad
+    m_res = gate
+    if m_res is None:
+        m_res = MIN_M if int((ok & (elig > MIN_M)).sum()) <= MAX_ROWS_WIDE \
+            else NARROW_M
+    mid = np.nonzero(ok & (elig > m_res) & (elig <= NARROW_M))[0].tolist()
+    wide = np.nonzero(ok & (elig > NARROW_M))[0].tolist()
+    overflow = np.nonzero(allowed & bad)[0].tolist()
+    return FusedSplit(m_res, mid, wide, overflow)
 
 
-@register_engine("imp_batched", batched=True, needs_alpha=True)
+def _append_winner(out: CandidateShortlist, res, sel_nodes, patches, ctx):
+    """Decode one dispatch's int32[7] winner into a host `Candidate`.
+
+    Dispatches run asynchronously; callers queue (res, sel_nodes) pairs and
+    decode them together at the end so one device sync covers all of them.
+    """
+    found, row, tier, combo, prio, _k, ncand = (int(x) for x in
+                                                jax.device_get(res))
+    out.n_candidates += ncand
+    if not found:
+        return
+    if sel_nodes is None:
+        node = row                        # node axis == resident row index
+    elif isinstance(sel_nodes, dict):
+        node = int(sel_nodes.get(row, row))   # combined resident+mid rows
+    else:
+        node = int(sel_nodes[row])        # gathered chunk
+    prow = patches.get(node)
+    vu = prow.vu if prow is not None else ctx.vu[node]
+    uids = [int(vu[j]) for j in range(len(vu)) if (combo >> j) & 1]
+    out.append(Candidate(node=node, victims=tuple(sorted(uids)), tier=tier,
+                         priority_sum=prio))
+
+
 def source_candidates_fused(
-    cluster, workload: WorkloadSpec, nodes: list[int],
+    cluster, workload: WorkloadSpec, nodes: list[int] | None = None,
     alpha: float = DEFAULT_ALPHA,
 ) -> list[Candidate]:
-    """Fused cluster-wide IMP: candidate sourcing AND Eq. 2 selection in one
-    jit dispatch per victim-bucket group (exactly one dispatch in the
-    common all-narrow case), fed by incrementally-cached victim arrays.
+    """Fused cluster-wide IMP over the device-resident state.
+
+    ``nodes=None`` (the scheduler's ``fused_filter`` path) runs Guaranteed
+    Filtering + sourcing + Eq. 2 selection over ALL nodes in one dispatch
+    against `DeviceClusterState` — zero per-node host work; view deltas ride
+    along as in-dispatch patch rows.  An explicit node list (legacy callers,
+    per-node ``source``) gathers exactly those rows device-side instead.
 
     Returns the winning `Candidate` per dispatch (plus per-node python
-    candidates for overflow nodes the dense rows cannot encode) as a
-    `CandidateShortlist` carrying the true evaluated-candidate count; the
-    scheduler's ``select`` then reduces this shortlist with the exact
-    host-side Eq. 2.  Winner parity with ``imp_batched_legacy`` +
-    ``select_best`` is covered by tests/test_fused_sourcing.py.
+    candidates for overflow rows) as a `CandidateShortlist` carrying the
+    true evaluated-candidate count; the scheduler's ``select`` reduces the
+    shortlist with the exact host-side Eq. 2.  Winner parity with ``imp``,
+    ``imp_jax`` and ``imp_batched_legacy`` is covered by
+    tests/test_fused_sourcing.py.
     """
-    if not nodes:
+    if nodes is not None and not nodes:
         return CandidateShortlist()
     spec = cluster.spec
-    request = Request(
-        need_gpus=workload.gpus_per_instance,
-        need_cgs=workload.coregroups_per_instance(spec.coregroup_size),
-        bundle_locality=workload.numa_policy == TopoPolicy.GUARANTEED,
-    )
-    groups, overflow = fused_rows(cluster, workload, nodes)
-    out = CandidateShortlist(_overflow_candidates(cluster, workload, overflow))
+    base = getattr(cluster, "base", cluster)
+    # flush=False: small dirty sets stay pending and ride the dispatch's
+    # patch overlay instead of paying a standalone scatter dispatch
+    dcs = base.device_state().sync(flush=False)
+    ctx = dcs.mirror
+    thresh = workload.priority
+    ng, nc, cpb = _req_scalars(spec, workload)
+    delta = set(cluster.delta_nodes()) if hasattr(cluster, "delta_nodes") \
+        else set()
+    if nodes is not None:
+        delta &= set(nodes)
+    patches = {d: encode_row(cluster, d, ctx.cap) for d in sorted(delta)}
+    split = split_fused_nodes(dcs, patches, thresh, nodes)
+    out = CandidateShortlist(_overflow_candidates(cluster, workload,
+                                                  split.overflow))
     out.n_candidates = len(out)
-    for sel_nodes, nodestate, victims, uids in groups:
-        m = victims.shape[2]
-        fn = fused_evaluator(spec, request, float(alpha), m)
-        res = fn(jnp.asarray(nodestate), jnp.asarray(victims),
-                 jnp.int32(workload.priority))
-        found, row, tier, combo, prio, _k, ncand = (int(v) for v in
-                                                    jax.device_get(res))
-        out.n_candidates += ncand
-        if found:
-            victim_uids = [int(uids[row, j]) for j in range(m)
-                           if (combo >> j) & 1]
-            out.append(Candidate(
-                node=sel_nodes[row],
-                victims=tuple(sorted(victim_uids)),
-                tier=tier,
-                priority_sum=prio,
-            ))
+    p, pidx, pbuf = _patch_args(dcs, patches)
+    req = (thresh, ng, nc, cpb, float(alpha))
+    pargs = None     # (pidx, pbuf) on device, built on first gathered use
+    pending = []     # dispatches are async: launch all, decode once
+    mid = split.mid
+    if nodes is None:
+        # the whole pipeline — overlay, Filtering, m_res-wide subsets over
+        # ALL rows, the gathered mid tier, and the Eq. 2 argmax — is ONE
+        # dispatch; indices travel as one aux upload
+        gidx = _pad_idx(mid) if mid else np.zeros(0, np.int32)
+        g = len(gidx)
+        if p == 0 and g == 0:
+            aux_d, pbuf_d = _empty_patch_args(ctx.cap)
+        else:
+            aux_d = jnp.asarray(np.concatenate([pidx, gidx]))
+            pbuf_d = jnp.asarray(pbuf)
+        res = resident_evaluator(spec, split.m_res, p, g, *req)(
+            dcs.nodestate, dcs.victims, dcs.drain, aux_d, pbuf_d)
+        n = dcs.cluster.num_nodes
+        sel = {n + j: node for j, node in enumerate(mid)} if mid else None
+        pending.append((res, sel))
+        mid = []     # consumed by the combined dispatch
+    else:
+        excluded = set(mid) | set(split.wide) | set(split.overflow)
+        narrow = [c for c in nodes if c not in excluded]
+        if narrow:
+            pargs = (jnp.asarray(pidx), jnp.asarray(pbuf))
+            res = gathered_evaluator(spec, split.m_res, p, *req)(
+                dcs.nodestate, dcs.victims, dcs.drain, *pargs,
+                jnp.asarray(_pad_idx(narrow)))
+            pending.append((res, narrow))
+    for m, rows in ((NARROW_M, mid), (ctx.cap, split.wide)):
+        for lo in range(0, len(rows), MAX_ROWS_WIDE):
+            chunk = rows[lo:lo + MAX_ROWS_WIDE]
+            if pargs is None:
+                pargs = (jnp.asarray(pidx), jnp.asarray(pbuf))
+            res = gathered_evaluator(spec, m, p, *req)(
+                dcs.nodestate, dcs.victims, dcs.drain, *pargs,
+                jnp.asarray(_pad_idx(chunk)))
+            pending.append((res, chunk))
+    for res, sel in pending:
+        _append_winner(out, res, sel, patches, ctx)
     return out
+
+
+class BatchSourcingSession:
+    """`plan_batch` sourcing: ALL requests vmapped in one dispatch.
+
+    At construction, ONE jit dispatch evaluates every request's per-node
+    class winners against the shared snapshot (`batch_class_evaluator`:
+    the request axis is a vmap axis of dynamic (priority, need) scalars) —
+    the tensors stay on device.  ``source(view, workload, i)`` then
+    preserves the sequential planned-eviction semantics exactly: request
+    *i*'s winner is the device merge of (a) the precomputed class data with
+    the view's delta rows masked out and (b) a small gathered re-dispatch
+    of just those delta rows patched to the view state.  Untouched rows are
+    never re-evaluated or re-uploaded.
+    """
+
+    def __init__(self, cluster: Cluster, workloads, alpha: float) -> None:
+        self.cluster = cluster
+        self.spec = cluster.spec
+        self.alpha = float(alpha)
+        self.dcs = cluster.device_state().sync()
+        self.ctx = self.dcs.mirror
+        self._row_cache: dict[int, tuple[int, VictimRow]] = {}
+        self.reqs = [(wl.priority,) + _req_scalars(self.spec, wl)
+                     for wl in workloads]
+        # adaptive gate, like the single-request path: precompute the class
+        # data at MIN_M when every request leaves at most MAX_ROWS_WIDE
+        # rows above it (those ride each merge dispatch's gather section).
+        # The snapshot is fixed, so all per-thresh scans dedupe.
+        self.gate = MIN_M
+        self._split_cache: dict[int, FusedSplit] = {}
+        if self.dcs.count_max > MIN_M:
+            for t in {t for t, _, _, _ in self.reqs}:
+                elig = ((self.ctx.vp < t) & self.ctx.stored).sum(axis=1)
+                if int((elig > MIN_M).sum()) > MAX_ROWS_WIDE:
+                    self.gate = NARROW_M
+                    break
+        rp = _pad_pow2(len(self.reqs))
+        th = np.zeros(rp, np.int32)           # pad: nothing eligible ...
+        ng = np.full(rp, _INT32_MAX, np.int32)   # ... and nothing feasible
+        nc = np.full(rp, _INT32_MAX, np.int32)
+        cpb = np.zeros(rp, np.int32)
+        for j, (t, g, c, b) in enumerate(self.reqs):
+            th[j], ng[j], nc[j], cpb[j] = t, g, c, b
+        self.class_data = batch_class_evaluator(self.spec, self.gate,
+                                                self.alpha)(
+            self.dcs.nodestate, self.dcs.victims, self.dcs.drain,
+            jnp.asarray(th), jnp.asarray(ng), jnp.asarray(nc),
+            jnp.asarray(cpb))
+
+    def _view_patches(self, view, delta) -> dict:
+        """Encode the view's delta rows, re-encoding ONLY rows a later plan
+        touched since they were last cached (`ClusterView.node_version`)."""
+        patches = {}
+        for d in delta:
+            ver = view.node_version(d)
+            hit = self._row_cache.get(d)
+            if hit is None or hit[0] != ver:
+                hit = (ver, encode_row(view, d, self.ctx.cap))
+                self._row_cache[d] = hit
+            patches[d] = hit[1]
+        return patches
+
+    def source(self, view, workload: WorkloadSpec,
+               i: int) -> CandidateShortlist:
+        thresh, ng, nc, cpb = self.reqs[i]
+        ctx = self.ctx
+        cap = ctx.cap
+        n = self.cluster.num_nodes
+        delta = sorted(view.delta_nodes())
+        patches = self._view_patches(view, delta)
+        dset = set(delta)
+        # class data was precomputed at ``self.gate``: rows above the gate
+        # (minus this plan's delta rows) ride the merge dispatch's gather
+        # section (mid) or the chunked 2^cap re-dispatch (wide).  The
+        # session snapshot is fixed, so the split caches per priority.
+        split = self._split_cache.get(thresh)
+        if split is None:
+            split = split_fused_nodes(self.dcs, {}, thresh, gate=self.gate)
+            self._split_cache[thresh] = split
+        mid = [w for w in split.mid if w not in dset]
+        wide = [w for w in split.wide if w not in dset]
+        overflow = [o for o in split.overflow if o not in dset]
+        out = CandidateShortlist(_overflow_candidates(view, workload,
+                                                      overflow))
+        out.n_candidates = len(out)
+        req = (thresh, ng, nc, cpb, self.alpha)
+        pending = []     # dispatches are async: launch all, decode once
+        # delta rows that cannot ride the merged dispatch
+        d_over = [d for d in delta if patches[d].overflow
+                  and patches[d].next_priority < thresh]
+        if d_over:
+            extra = _overflow_candidates(view, workload, d_over)
+            out.extend(extra)
+            out.n_candidates += len(extra)
+        d_dense = [d for d in delta if d not in set(d_over)]
+        elig = {d: int(((patches[d].vp < thresh) & patches[d].stored).sum())
+                for d in d_dense}
+        d_wide = [d for d in d_dense if elig[d] > NARROW_M]
+        d_dense = [d for d in d_dense if elig[d] <= NARROW_M]
+        # ONE dispatch: request i's class tensors minus its delta rows,
+        # merged with a NARROW_M-wide pass over the patched dense delta
+        # rows AND the untouched mid-tier rows the gate excluded
+        p, pidx, pbuf = _pack_patches({d: patches[d] for d in d_dense}, cap)
+        gather = sorted(d_dense) + mid
+        didx = _pad_idx(delta) if delta else np.zeros(0, np.int32)
+        gidx = _pad_idx(gather) if gather else np.zeros(0, np.int32)
+        if len(didx) == 0 and len(gidx) == 0:
+            aux_d, pbuf_d = _empty_patch_args(cap)
+        else:
+            aux_d = jnp.asarray(np.concatenate([didx, pidx, gidx]))
+            pbuf_d = jnp.asarray(pbuf)
+        res = batch_merge_evaluator(self.spec, NARROW_M, len(didx),
+                                    len(gidx), *req)(
+            *self.class_data, self.dcs.nodestate, self.dcs.victims,
+            self.dcs.drain, jnp.int32(i), aux_d, pbuf_d)
+        sel = {n + j: node for j, node in enumerate(gather)}
+        pending.append((res, sel))
+        # wide rows (9..16 eligible victims): chunked 2^cap dispatches —
+        # patched delta rows and untouched rows alike
+        if d_wide or wide:
+            pw, pwidx, pwbuf = _pack_patches(
+                {d: patches[d] for d in d_wide}, cap)
+            pargs = (jnp.asarray(pwidx), jnp.asarray(pwbuf))
+            rows = d_wide + wide
+            for lo in range(0, len(rows), MAX_ROWS_WIDE):
+                chunk = rows[lo:lo + MAX_ROWS_WIDE]
+                res = gathered_evaluator(self.spec, cap, pw, *req)(
+                    self.dcs.nodestate, self.dcs.victims, self.dcs.drain,
+                    *pargs, jnp.asarray(_pad_idx(chunk)))
+                pending.append((res, chunk))
+        for res, sel in pending:
+            _append_winner(out, res, sel, patches, ctx)
+        return out
+
+
+def warmup_fused(cluster: Cluster, alpha: float = DEFAULT_ALPHA,
+                 batch: int = 8, workloads=None) -> None:
+    """Pre-compile the fused jit buckets for this cluster's shapes.
+
+    Opt-in via ``TopoScheduler(..., warmup=True)``: drives REAL sourcing
+    sweeps (pure reads against copy-on-write views, so cluster state is
+    untouched) for each preemptor class — once against the clean state and
+    once against a view with a delta — plus one `plan_batch` session, so
+    the jit variants a first plan actually hits (resident evaluator with
+    and without a patch bucket, the request-vmapped class evaluator, the
+    per-request merge) are compiled at construction instead of on the
+    first plans (cold P90 is compile-dominated otherwise).
+
+    ``workloads`` defaults to the Table 3 classes; pass the deployment's
+    own preemptor classes when they differ (the single-request programs
+    specialize per request).
+    """
+    from .workload import table3_workloads
+
+    if workloads is None:
+        workloads = table3_workloads()
+    workloads = list(workloads)
+    cluster.device_state().sync()
+    for wl in workloads:
+        source_candidates_fused(cluster, wl, None, alpha=alpha)
+        view = cluster.view()
+        for node in range(cluster.num_nodes):    # fabricate one view delta
+            victims = view.victims_on(node, wl.priority)
+            if victims:
+                view.plan_evict(victims[0].uid)
+                source_candidates_fused(view, wl, None, alpha=alpha)
+                break
+    if batch > 1 and workloads:
+        session = BatchSourcingSession(
+            cluster, tuple((workloads * batch)[:batch]), alpha)
+        session.source(cluster.view(), workloads[0], 0)
+
+
+register_engine("imp_batched", batched=True, needs_alpha=True,
+                fused_filter=True, batch_factory=BatchSourcingSession,
+                warmup_fn=warmup_fused)(source_candidates_fused)

@@ -8,14 +8,27 @@ Pipeline per scheduling attempt:
 2. **Preemption** (only if the normal cycle fails):
    * *Guaranteed Filtering* — keep candidate nodes that could satisfy the
      preemptor's topology policy if ALL their victims were drained.
-   * *Best-effort Sorting* — per node, source victim-set candidates with the
+   * *Best-effort Sorting* — source victim-set candidates with the
      configured engine ({engines}), then select the global argmax of
      Eq. 1/Eq. 2.
    * *Bind* — evict the victims and place the preemptor.
 
+For host engines, Filtering is a python loop over the nodes and Sorting is
+sourced per node.  For engines registered with ``fused_filter=True``
+(``imp_batched``, the default fast path) the scheduler does NO per-node host
+work at all: Filtering → Sorting → Eq. 2 selection run as ONE jit dispatch
+over the cluster's device-resident state (`Cluster.device_state`) — the
+fully-drained masks are popcounted on device, copy-on-write view deltas are
+overlaid in-dispatch, and only the winner's indices come back to the host.
+``invalidate_node`` (hit by every bind/evict/restore) marks single device
+rows stale; they re-upload as one ``.at[rows].set()`` scatter on the next
+plan, so cluster state never leaves the accelerator wholesale.
+
 The engine list above is rendered from the live registry
 (``repro.core.engines.registered_engines``); custom engines registered with
 ``@register_engine("name")`` become valid ``engine=`` arguments automatically.
+Pass ``warmup=True`` to pre-compile the engine's jit buckets at construction
+(first plans otherwise pay compile time).
 
 Transactional protocol
 ----------------------
@@ -25,19 +38,25 @@ Transactional protocol
 mutated until ``txn.commit()``; dropping or ``rollback()``-ing a planned
 transaction is free, which makes the Table 4 "independent preemptions"
 protocol a pure read.  ``plan_batch([...])`` plans several pending
-preemptors against one shared view so the decisions compose; cluster-wide
-engines (``imp_batched``) evaluate each request's surviving nodes in a
-single vmapped sweep.  ``schedule`` / ``preempt`` / ``schedule_or_preempt``
-are plan-and-commit conveniences, and ``undo(decision)`` delegates to
+preemptors against one shared view so the decisions compose; with a
+``batch_factory`` engine (``imp_batched``) ALL requests' sourcing is ONE
+dispatch vmapped over a request axis, and each plan's sequential
+planned-eviction semantics are preserved by masking its delta nodes out of
+the precomputed tensors on device and re-sourcing only those rows.
+``schedule`` / ``preempt`` / ``schedule_or_preempt`` are plan-and-commit
+conveniences, and the deprecated ``undo(decision)`` shim delegates to
 ``Transaction.rollback()``.
 
 Latency accounting mirrors the paper's overhead analysis: we time the
-candidate-sourcing phase ("the primary contributor to time overhead").
+candidate-sourcing phase ("the primary contributor to time overhead").  For
+``fused_filter`` engines the number necessarily INCLUDES Filtering — it
+happens inside the same dispatch.
 """
 from __future__ import annotations
 
 import inspect
 import time
+import warnings
 from typing import Callable, Iterable
 
 from . import preemption, preemption_jax  # noqa: F401  (self-register engines)
@@ -51,6 +70,23 @@ from .scoring import DEFAULT_ALPHA, Candidate
 from .workload import TopoPolicy, WorkloadSpec
 
 
+class _LazyBatchSession:
+    """Defers the engine's batch-sourcing session (device snapshot + the
+    vmapped all-requests dispatch) until a plan actually reaches the
+    preemption phase — a batch fully satisfied by the normal cycle never
+    pays for it.  Safe because the session snapshots the BASE cluster,
+    which planning never mutates."""
+
+    def __init__(self, factory) -> None:
+        self._factory = factory
+        self._session = None
+
+    def source(self, view, workload, index):
+        if self._session is None:
+            self._session = self._factory()
+        return self._session.source(view, workload, index)
+
+
 class TopoScheduler:
     def __init__(
         self,
@@ -58,11 +94,16 @@ class TopoScheduler:
         engine: EngineName = "imp",
         alpha: float = DEFAULT_ALPHA,
         topology_aware_placement: bool | None = None,
+        warmup: bool = False,
     ) -> None:
         self.cluster = cluster
         self.engine: EngineName = engine
         self._engine: SourcingEngine = get_engine(engine)
         self.alpha = alpha
+        # engines that fuse Guaranteed Filtering into their dispatch get
+        # nodes=None and the host filter loop is skipped entirely
+        self._fused_filter = bool(getattr(self._engine, "fused_filter",
+                                          False))
         # fused engines run the Eq. 2 selection inside sourcing and need the
         # scheduler's alpha; pass it iff the engine's signature accepts it
         # (custom engine objects with the legacy 3-arg source_all still work)
@@ -81,6 +122,10 @@ class TopoScheduler:
         )
         self.sourcing_us_log: list[float] = []
         self.listeners: list[Callable[[SchedulingDecision, str], None]] = []
+        if warmup:
+            warm = getattr(self._engine, "warmup", None)
+            if callable(warm):
+                warm(cluster, self.alpha)
 
     # ---- commit/rollback observers ------------------------------------------------
     def add_listener(self, fn: Callable[[SchedulingDecision, str], None]) -> None:
@@ -126,7 +171,15 @@ class TopoScheduler:
     def _plan_normal(self, workload: WorkloadSpec,
                      view: ClusterView) -> tuple[int, Placement] | None:
         best: tuple[tuple, int, Placement] | None = None
+        need_gpus, need_cgs, _ = self._request(workload)
         for node in range(view.num_nodes):
+            free_gpu, free_cg = view.free_masks(node)
+            # count pre-screen: placement (topology-aware or blind) can
+            # never succeed without enough free bits — skips the expensive
+            # per-node placement construction on saturated clusters
+            if (free_gpu.bit_count() < need_gpus
+                    or free_cg.bit_count() < need_cgs):
+                continue
             p = self._place_on(workload, node, view)
             if p is None:
                 continue
@@ -171,16 +224,32 @@ class TopoScheduler:
 
     def _plan_preempt(
         self, workload: WorkloadSpec, view: ClusterView,
+        session=None, index: int = 0,
     ) -> tuple[SchedulingDecision, int | None]:
-        nodes = self._guaranteed_filter(workload, view)
-        if not nodes:
-            return SchedulingDecision(kind="rejected", workload=workload), None
-        t0 = time.perf_counter()
-        if self._source_takes_alpha:
-            candidates: list[Candidate] = self._engine.source_all(
-                view, workload, nodes, alpha=self.alpha)
+        if session is not None:
+            # plan_batch fast path: sourcing was vmapped over the request
+            # axis at session start; this merges request `index`'s result
+            # with the view's delta rows (Filtering fused in-dispatch)
+            t0 = time.perf_counter()
+            candidates: list[Candidate] = session.source(view, workload,
+                                                         index)
+        elif self._fused_filter:
+            # Guaranteed Filtering runs inside the engine's dispatch over
+            # the device-resident state: no host node loop, nodes=None
+            t0 = time.perf_counter()
+            candidates = self._engine.source_all(view, workload, None,
+                                                 alpha=self.alpha)
         else:
-            candidates = self._engine.source_all(view, workload, nodes)
+            nodes = self._guaranteed_filter(workload, view)
+            if not nodes:
+                return SchedulingDecision(kind="rejected",
+                                          workload=workload), None
+            t0 = time.perf_counter()
+            if self._source_takes_alpha:
+                candidates = self._engine.source_all(
+                    view, workload, nodes, alpha=self.alpha)
+            else:
+                candidates = self._engine.source_all(view, workload, nodes)
         sourcing_us = (time.perf_counter() - t0) * 1e6
         self.sourcing_us_log.append(sourcing_us)
         if not candidates:
@@ -206,7 +275,8 @@ class TopoScheduler:
     # ---- the transactional entry points --------------------------------------------
     def plan(self, workload: WorkloadSpec, *, view: ClusterView | None = None,
              allow_normal: bool = True,
-             allow_preempt: bool = True) -> Transaction:
+             allow_preempt: bool = True,
+             _session=None, _index: int = 0) -> Transaction:
         """Evaluate one request Filtering → Sorting without mutating the cluster.
 
         Returns a `Transaction` whose ``decision`` is fully evaluated (node,
@@ -228,7 +298,8 @@ class TopoScheduler:
                     placement=placement, hit=self._hit(workload, placement),
                 )
         if decision is None and allow_preempt:
-            decision, planned_uid = self._plan_preempt(workload, view)
+            decision, planned_uid = self._plan_preempt(
+                workload, view, session=_session, index=_index)
         if decision is None:
             decision = SchedulingDecision(kind="rejected", workload=workload)
         return Transaction(cluster=self.cluster, decision=decision,
@@ -241,13 +312,33 @@ class TopoScheduler:
 
         All plans share a copy-on-write view: request *i+1* sees request
         *i*'s planned evictions and binds, so the returned transactions can
-        be committed together in order.  With a cluster-wide engine
-        (``imp_batched``) each request's sourcing is a single vmapped sweep
-        over all its filtered nodes — the multi-request fast path.
+        be committed together in order.  With a ``batch_factory`` engine
+        (``imp_batched``) the whole batch's Filtering + sourcing is ONE jit
+        dispatch vmapped over the request axis against the device-resident
+        snapshot; each plan then merges its own result with the view's
+        delta rows on device, which preserves the sequential semantics
+        bitwise (parity with per-request planning is pinned in
+        tests/test_fused_sourcing.py).
         """
+        workloads = list(workloads)
         view = ClusterView(self.cluster)
-        return [self.plan(wl, view=view, allow_preempt=allow_preempt)
-                for wl in workloads]
+        session = None
+        if allow_preempt and len(workloads) > 1:
+            starter = getattr(self._engine, "start_batch", None)
+            if callable(starter):
+                if getattr(self._engine, "batch_factory", None) is not None:
+                    # defer the snapshot + vmapped dispatch until a plan
+                    # actually reaches the preemption phase
+                    batch = tuple(workloads)
+                    session = _LazyBatchSession(
+                        lambda: starter(self.cluster, batch, self.alpha))
+                else:
+                    # custom engine object: honor whatever it returns
+                    session = starter(self.cluster, tuple(workloads),
+                                      self.alpha)
+        return [self.plan(wl, view=view, allow_preempt=allow_preempt,
+                          _session=session, _index=i)
+                for i, wl in enumerate(workloads)]
 
     # ---- plan-and-commit conveniences ----------------------------------------------
     def schedule(self, workload: WorkloadSpec) -> SchedulingDecision:
@@ -267,11 +358,15 @@ class TopoScheduler:
         """Reverse a committed decision (Table 4 protocol evaluates each of
         the 50 scale-ups independently on the same saturated state).
 
-        Deprecated in favour of reading ``plan()`` decisions without
-        committing; kept as a shim that delegates to
-        ``Transaction.rollback()``, which restores every victim with its
-        original uid and full placement.
+        .. deprecated:: read ``plan()`` decisions without committing, or
+           call ``decision.txn.rollback()`` directly; this shim delegates to
+           `Transaction.rollback`, which restores every victim with its
+           original uid and full placement.
         """
+        warnings.warn(
+            "TopoScheduler.undo() is deprecated; use Transaction.rollback() "
+            "(decision.txn.rollback()) or read plan() decisions without "
+            "committing", DeprecationWarning, stacklevel=2)
         if decision.txn is None:
             raise ValueError("decision has no transaction to roll back")
         decision.txn.rollback()

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import random
+import time
 
 import numpy as np
 
@@ -250,6 +251,82 @@ def run_latency_experiment(
         cycle += 1
         if cycle > samples:  # safety: cannot source enough preemptions
             break
+    return report
+
+
+def run_plan_latency_experiment(
+    cfg: SimConfig,
+    engine: EngineName,
+    preemptor_name: str,
+    samples: int = 50,
+    warmup: bool = False,
+) -> HitRateReport:
+    """Filtering-INCLUSIVE end-to-end ``plan()`` latency for one preemptor.
+
+    Unlike `run_latency_experiment` (which reports the engine's own
+    sourcing phase), this times the whole transactional ``plan()`` call —
+    normal cycle, Guaranteed Filtering, Sorting, and Eq. 2 selection — so
+    engines that fuse Filtering into the sourcing dispatch are compared
+    end-to-end with engines that filter on the host.  ``sourcing_us``
+    holds the plan wall times of preempted decisions.
+    """
+    report = HitRateReport(engine=engine)
+    workloads = {w.name: w for w in table3_workloads()}
+    wl = workloads[preemptor_name]
+    cycle = 0
+    while len(report.sourcing_us) < samples:
+        cluster = build_saturated_cluster(
+            dataclasses.replace(cfg, seed=cfg.seed + cycle))
+        sched = TopoScheduler(cluster, engine=engine, alpha=cfg.alpha,
+                              warmup=warmup)
+        for _ in range(min(samples - len(report.sourcing_us), 10)):
+            t0 = time.perf_counter()
+            txn = sched.plan(wl)
+            plan_us = (time.perf_counter() - t0) * 1e6
+            dec = txn.commit()
+            if dec.preempted:
+                report.preemptions += 1
+                report.hits += int(dec.hit)
+                report.sourcing_us.append(plan_us)
+            elif dec.rejected:
+                break
+        cycle += 1
+        if cycle > samples:  # safety: cannot source enough preemptions
+            break
+    return report
+
+
+def run_plan_batch_latency(
+    cfg: SimConfig,
+    engine: EngineName,
+    preemptor_name: str,
+    batch: int = 8,
+    rounds: int = 5,
+) -> HitRateReport:
+    """Per-request end-to-end latency of ``plan_batch`` (one snapshot).
+
+    Plans ``batch`` identical preemptors per round as pure reads (never
+    committed, so every round sees the same saturated state); the first
+    round warms the jit caches and is excluded.  ``sourcing_us`` holds the
+    amortized per-request wall time of each timed round.
+    """
+    report = HitRateReport(engine=engine)
+    workloads = {w.name: w for w in table3_workloads()}
+    wl = workloads[preemptor_name]
+    cluster = build_saturated_cluster(cfg)
+    sched = TopoScheduler(cluster, engine=engine, alpha=cfg.alpha)
+    sched.plan_batch([wl] * batch)          # jit warm-up round
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        txns = sched.plan_batch([wl] * batch)
+        report.sourcing_us.append(
+            (time.perf_counter() - t0) * 1e6 / batch)
+        for t in txns:
+            if t.decision.preempted:
+                report.preemptions += 1
+                report.hits += int(t.decision.hit)
+            elif t.decision.rejected:
+                report.failures += 1
     return report
 
 

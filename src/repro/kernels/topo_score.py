@@ -15,7 +15,10 @@ Two kernels share the tier/score math:
   each grid step also reduces its tile to (smallest feasible subset size,
   best tier, best score, flat index of that winner), so the ``imp_pallas``
   engine evaluates every subset size in ONE dispatch and only scans the
-  dense outputs at the winning size.
+  dense outputs at the winning size.  It also takes a per-lane *filtering
+  mask* (``ok``): the scheduler's Guaranteed-Filtering / victim-eligibility
+  constraints become VPU lane masking instead of host pre-filtering —
+  masked lanes report tier 3 / -inf score and never win the argmax.
 
 Layout: subsets are padded to (rows, 128) int32.  Outputs: tier (0/1/2,
 3 = infeasible) and the Eq. 1 score (-inf where infeasible).
@@ -120,19 +123,26 @@ def _kernel(combo_gpu_ref, combo_cg_ref, prio_ref, tier_ref, score_ref, *,
     score_ref[...] = score
 
 
-def _argmax_kernel(combo_gpu_ref, combo_cg_ref, prio_ref, k_ref,
+def _argmax_kernel(combo_gpu_ref, combo_cg_ref, prio_ref, k_ref, ok_ref,
                    tier_ref, score_ref, kmin_ref, btier_ref, bscore_ref,
                    bidx_ref, *, spec: ServerSpec, req: TopoRequest):
-    """Tier/score tile + per-tile running argmax.
+    """Tier/score tile + filtering mask + per-tile running argmax.
 
-    The reduction implements the IMP selection order inside one tile:
-    smallest feasible subset size k first, then tier-then-score (lowest
-    tier, highest Eq. 1 score), then lowest flat subset index.  Host-side
-    merging of the ``[n_tiles]`` outputs is O(tiles) on scalars, so the
-    engine dispatches exactly once per node regardless of victim count.
+    ``ok`` is the fused filtering input: lanes whose subset violates the
+    scheduler's constraints (ineligible victims, filtered-out node) are
+    masked to tier 3 / -inf score ON DEVICE, so callers never pre-filter
+    subsets host-side.  The reduction implements the IMP selection order
+    inside one tile: smallest feasible subset size k first, then
+    tier-then-score (lowest tier, highest Eq. 1 score), then lowest flat
+    subset index.  Host-side merging of the ``[n_tiles]`` outputs is
+    O(tiles) on scalars, so the engine dispatches exactly once per node
+    regardless of victim count.
     """
     tier, score = _tier_score(combo_gpu_ref[...], combo_cg_ref[...],
                               prio_ref[...], spec=spec, req=req)
+    ok = ok_ref[...] != 0
+    tier = jnp.where(ok, tier, 3).astype(jnp.int32)
+    score = jnp.where(ok, score, -jnp.inf).astype(jnp.float32)
     tier_ref[...] = tier
     score_ref[...] = score
 
@@ -205,9 +215,15 @@ def topo_score_argmax_pallas(
     spec: ServerSpec,
     req: TopoRequest,
     interpret: bool | None = None,
+    ok: jnp.ndarray | None = None,   # filtering mask per lane (None = all ok)
 ):
     """Single-dispatch scoring of subsets of EVERY size plus the per-tile
     running argmax.
+
+    ``ok`` is the fused filtering-mask input: lanes with ``ok == 0`` (e.g.
+    subsets touching victims the preemptor may not evict, or subsets of a
+    node Guaranteed Filtering rejected) are masked infeasible inside the
+    kernel instead of being pre-filtered on the host.
 
     Returns (tier int32[n], score f32[n], kmin int32[T], btier int32[T],
     bscore f32[T], bidx int32[T]) with T = number of (8, 128) grid tiles;
@@ -225,6 +241,9 @@ def topo_score_argmax_pallas(
     cc2 = _tiled(combo_cg, 0, n_pad, tile)
     pr2 = _tiled(prio, 0, n_pad, tile)
     kk2 = _tiled(k, K_INFEASIBLE, n_pad, tile)
+    if ok is None:
+        ok = jnp.ones(n, jnp.int32)
+    ok2 = _tiled(ok.astype(jnp.int32), 0, n_pad, tile)
 
     n_tiles = n_pad // tile
     blk = pl.BlockSpec((None, ROWS_PER_TILE, LANES), lambda i: (i, 0, 0))
@@ -233,7 +252,7 @@ def topo_score_argmax_pallas(
     tier, score, kmin, btier, bscore, bidx = pl.pallas_call(
         kernel,
         grid=(n_tiles,),
-        in_specs=[blk, blk, blk, blk],
+        in_specs=[blk, blk, blk, blk, blk],
         out_specs=[blk, blk, scl, scl, scl, scl],
         out_shape=[
             jax.ShapeDtypeStruct(cg2.shape, jnp.int32),
@@ -244,7 +263,7 @@ def topo_score_argmax_pallas(
             jax.ShapeDtypeStruct((n_tiles,), jnp.int32),
         ],
         interpret=interpret,
-    )(cg2, cc2, pr2, kk2)
+    )(cg2, cc2, pr2, kk2, ok2)
     return tier.reshape(-1)[:n], score.reshape(-1)[:n], kmin, btier, bscore, bidx
 
 
@@ -275,7 +294,14 @@ def flextopo_imp_pallas(cluster, workload, node):
     """Drop-in engine: same semantics as preemption.flextopo_imp, but every
     subset size is evaluated in ONE kernel dispatch — the per-tile running
     argmax locates the smallest feasible size, then candidates are read off
-    the dense tier output at that size only."""
+    the dense tier output at that size only.
+
+    Eligible victims are a prefix of the (priority, uid) order, so the
+    preemptor-priority filter is a host-side SLICE (never a subset
+    enumeration blow-up); the kernel's filtering-mask input (``ok``)
+    additionally zeroes any lane whose subset escapes that eligibility —
+    the belt-and-braces in-kernel expression of Guaranteed Filtering that
+    fused callers with ragged eligibility rely on."""
     from repro.core.cluster import MAX_DENSE_VICTIMS
     from repro.core.scoring import Candidate
     from repro.core.workload import TopoPolicy
@@ -298,9 +324,13 @@ def flextopo_imp_pallas(cluster, workload, node):
     vc = [v.cg_mask for v in victims]
     vp = [v.priority for v in victims]
     ids, cg, cc, pr, kk = _all_size_combos(free_gpu, free_cg, vg, vc, vp)
+    elig_bits = sum(1 << j for j, v in enumerate(victims)
+                    if v.priority < workload.priority)
+    ok = (ids & ~np.int64(elig_bits)) == 0
     tier, _, kmin, _, _, _ = topo_score_argmax_pallas(
         jnp.asarray(cg, jnp.int32), jnp.asarray(cc, jnp.int32),
-        jnp.asarray(pr, jnp.int32), jnp.asarray(kk, jnp.int32), spec, req)
+        jnp.asarray(pr, jnp.int32), jnp.asarray(kk, jnp.int32), spec, req,
+        ok=jnp.asarray(ok, jnp.int32))
     k_star = int(np.min(np.asarray(kmin)))
     if k_star >= int(K_INFEASIBLE):
         return []

@@ -1,0 +1,159 @@
+"""Device-resident cluster state: coherence under randomized mutation
+sequences, single-row scatter updates, drain masks, warm-up, and the
+``undo()`` deprecation shim.
+
+The coherence tests are hypothesis-style seed loops (no hypothesis
+dependency — these must run in minimal environments): random
+commit/rollback/plan_batch sequences drive the incremental
+``invalidate_node`` → ``sync()`` path, and after EVERY mutation the device
+arrays must equal a from-scratch host rebuild.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (Cluster, RTX4090_SERVER, TopoScheduler,
+                        table3_workloads)
+from repro.core.cluster import encode_row, pack_rows
+from repro.core.placement import Placement
+from repro.core.workload import WorkloadSpec
+
+WL3 = {w.name: w for w in table3_workloads()}
+
+
+def random_cluster(seed: int, nodes: int = 5) -> Cluster:
+    rng = random.Random(seed)
+    cluster = Cluster(RTX4090_SERVER, nodes)
+    for node in range(nodes):
+        free = list(range(8))
+        rng.shuffle(free)
+        while free:
+            if len(free) >= 2 and rng.random() < 0.4:
+                g = [free.pop(), free.pop()]
+                wl = WL3["C"]
+            else:
+                g = [free.pop()]
+                wl = WL3["D"]
+            if rng.random() < 0.2:
+                continue
+            mask = sum(1 << x for x in g)
+            cluster.bind(wl, node, Placement(mask, mask, 0))
+    return cluster
+
+
+def rebuilt_arrays(cluster: Cluster):
+    """From-scratch host rebuild of the device layout (no incremental path)."""
+    cap = cluster.sourcing_context().cap
+    rows = [encode_row(cluster, n, cap) for n in range(cluster.num_nodes)]
+    return pack_rows(rows, list(range(cluster.num_nodes)), cap)
+
+
+def assert_coherent(dcs):
+    dcs.sync()
+    ns, v, dr = rebuilt_arrays(dcs.cluster)
+    assert np.array_equal(np.asarray(dcs.nodestate), ns), "nodestate diverged"
+    assert np.array_equal(np.asarray(dcs.victims), v), "victim rows diverged"
+    assert np.array_equal(np.asarray(dcs.drain), dr), "drain masks diverged"
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 5, 8, 13])
+def test_device_state_coherent_after_random_sequences(seed):
+    """Randomized commit / rollback / plan_batch / dropped-plan sequences:
+    the resident arrays must equal a from-scratch rebuild after EVERY
+    mutation (single-row scatters only — the cluster is never majority
+    dirty after the initial upload)."""
+    rng = random.Random(1000 + seed)
+    cluster = random_cluster(seed)
+    sched = TopoScheduler(cluster, engine="imp_batched")
+    dcs = cluster.device_state()
+    assert_coherent(dcs)
+    committed = []
+    names = ["B", "C", "D"]
+    for _ in range(10):
+        op = rng.choice(["plan_commit", "rollback", "plan_batch",
+                         "plan_drop"])
+        if op == "plan_commit":
+            txn = sched.plan(WL3[rng.choice(names)],
+                             allow_normal=rng.random() < 0.5)
+            txn.commit()
+            if txn.decision:
+                committed.append(txn)
+        elif op == "rollback" and committed:
+            # LIFO: only the most recent commit is guaranteed reversible
+            # (an older txn's instance may since have been preempted)
+            committed.pop().rollback()
+        elif op == "plan_batch":
+            txns = sched.plan_batch(
+                [WL3[rng.choice(names)] for _ in range(rng.randint(2, 4))])
+            for t in txns:
+                t.commit()
+                if t.decision:
+                    committed.append(t)
+        else:  # plan_drop: a pure read must not dirty anything for real
+            sched.plan(WL3[rng.choice(names)])
+        assert_coherent(dcs)
+
+
+def test_single_mutation_uses_row_scatter_not_full_rebuild():
+    cluster = random_cluster(3, nodes=6)
+    dcs = cluster.device_state()
+    dcs.sync()                       # initial full upload
+    before = dcs.nodestate
+    victims = cluster.victims_on(2, WL3["B"].priority)
+    assert victims
+    cluster.evict(victims[0].uid)    # dirties exactly one row
+    assert dcs._dirty == {2}
+    assert_coherent(dcs)
+    # other rows were scattered in place, not re-uploaded wholesale
+    assert np.array_equal(np.asarray(before)[:, :2],
+                          np.asarray(dcs.nodestate)[:, :2])
+
+
+def test_drain_masks_are_free_union_victims():
+    """Independent check of the drain field against the live instances."""
+    cluster = random_cluster(7, nodes=4)
+    dcs = cluster.device_state().sync()
+    dr = np.asarray(dcs.drain)
+    for node in range(cluster.num_nodes):
+        fg, fc = cluster.free_masks(node)
+        for inst in cluster.instances_on(node):
+            if inst.preemptible:
+                fg |= inst.gpu_mask
+                fc |= inst.cg_mask
+        assert dr[0, node] == fg and dr[1, node] == fc
+
+
+def test_view_deltas_never_touch_resident_arrays():
+    """plan() against a delta'd view overlays patches in-dispatch; the
+    resident arrays must stay byte-identical to the base cluster."""
+    from repro.core.cluster import ClusterView
+
+    cluster = random_cluster(11, nodes=4)
+    sched = TopoScheduler(cluster, engine="imp_batched")
+    dcs = cluster.device_state()
+    view = ClusterView(cluster)
+    for wl in (WL3["B"], WL3["C"], WL3["B"]):
+        sched.plan(wl, view=view, allow_normal=False)
+    assert view.delta_nodes()        # the plans really did stack deltas
+    assert_coherent(dcs)             # ... without dirtying the base state
+
+
+def test_warmup_precompiles_and_plans_identically():
+    cold = TopoScheduler(random_cluster(5), engine="imp_batched")
+    warm = TopoScheduler(random_cluster(5), engine="imp_batched",
+                         warmup=True)
+    d0 = cold.plan(WL3["B"], allow_normal=False).decision
+    d1 = warm.plan(WL3["B"], allow_normal=False).decision
+    assert (d0.kind, d0.node, d0.victims) == (d1.kind, d1.node, d1.victims)
+    # warmup is a no-op for engines without jit buckets
+    TopoScheduler(random_cluster(5), engine="imp", warmup=True)
+
+
+def test_undo_shim_warns_deprecation():
+    cluster = random_cluster(9)
+    sched = TopoScheduler(cluster, engine="imp_batched")
+    dec = sched.preempt(WL3["B"])
+    assert dec.preempted
+    with pytest.warns(DeprecationWarning, match="Transaction.rollback"):
+        sched.undo(dec)

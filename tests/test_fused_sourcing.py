@@ -41,7 +41,8 @@ def random_cluster(seed: int, nodes: int = 5) -> Cluster:
 
 def _decision_key(dec):
     return (dec.kind, dec.node, dec.victims,
-            None if dec.placement is None else dec.placement.tier)
+            None if dec.placement is None else dec.placement.tier,
+            dec.hit)
 
 
 @pytest.mark.parametrize("seed", [0, 3, 7, 11, 42, 1234])
@@ -74,8 +75,9 @@ def test_fused_parity_across_alpha(alpha):
 
 def test_fused_parity_in_plan_batch():
     """Later plans in a batch see earlier planned evictions/binds through
-    the copy-on-write view; the fused path patches those delta nodes onto
-    the cached context rows and must still agree with the legacy engine."""
+    the copy-on-write view; the vmapped batch session masks those delta
+    nodes out of its precomputed tensors and re-sources only them, and
+    must still agree with the legacy engine."""
     batch = [WL3["B"], WL3["B"], WL3["C"], WL3["B"]]
     keys = {}
     for engine in ("imp_batched_legacy", "imp_batched"):
@@ -84,6 +86,79 @@ def test_fused_parity_in_plan_batch():
         keys[engine] = [_decision_key(t.decision)
                         for t in sched.plan_batch(batch)]
     assert keys["imp_batched_legacy"] == keys["imp_batched"]
+
+
+@pytest.mark.parametrize("alpha", [0.0, 0.3, 0.5, 1.0])
+def test_vmapped_plan_batch_parity_across_engines_and_alpha(alpha):
+    """Acceptance pin: the vmapped `plan_batch` produces bitwise-identical
+    decisions (node, victims, tier, hit) vs imp, imp_jax and the legacy
+    engine across the alpha sweep — 8 requests against one snapshot."""
+    batch = [WL3[n] for n in ("B", "B", "C", "B", "C", "C", "B", "D")]
+    for seed in (3, 42):
+        keys = {}
+        for engine in PARITY_ENGINES:
+            cluster = random_cluster(seed)
+            sched = TopoScheduler(cluster, engine=engine, alpha=alpha)
+            keys[engine] = [_decision_key(t.decision)
+                            for t in sched.plan_batch(batch)]
+        assert len(set(map(tuple, keys.values()))) == 1, (seed, alpha, keys)
+
+
+def test_vmapped_plan_batch_parity_across_commit_sequences():
+    """Acceptance pin: repeated plan_batch → commit-all rounds stay
+    decision-identical across engines (the resident state must track every
+    commit incrementally, and each round's session snapshots it)."""
+    seqs = {}
+    for engine in ("imp", "imp_batched_legacy", "imp_batched"):
+        cluster = random_cluster(17)
+        sched = TopoScheduler(cluster, engine=engine)
+        seq = []
+        for names in (("B", "C", "B"), ("C", "B"), ("B", "B", "C")):
+            txns = sched.plan_batch([WL3[n] for n in names])
+            for t in txns:
+                t.commit()
+            seq.extend(_decision_key(t.decision) for t in txns)
+        seqs[engine] = seq
+    assert len(set(map(tuple, seqs.values()))) == 1, seqs
+
+
+def test_vmapped_plan_batch_matches_sequential_single_plans():
+    """The batch session and the single-request resident path must agree
+    candidate-for-candidate (same shared view, same decisions AND the same
+    true evaluated-candidate counts)."""
+    batch = [WL3["B"], WL3["C"], WL3["B"], WL3["B"]]
+    from repro.core.cluster import ClusterView
+
+    cluster_a = random_cluster(29)
+    sched_a = TopoScheduler(cluster_a, engine="imp_batched")
+    batched = sched_a.plan_batch(batch)
+
+    cluster_b = random_cluster(29)
+    sched_b = TopoScheduler(cluster_b, engine="imp_batched")
+    view = ClusterView(cluster_b)
+    singles = [sched_b.plan(wl, view=view) for wl in batch]
+
+    assert ([_decision_key(t.decision) for t in batched]
+            == [_decision_key(t.decision) for t in singles])
+    assert ([t.decision.num_candidates for t in batched]
+            == [t.decision.num_candidates for t in singles])
+
+
+def test_fused_filter_rejects_identically_to_host_filter():
+    """Guaranteed Filtering fused into the dispatch must reject exactly when
+    the host filter loop does — here nothing on the cluster is preemptible
+    below the preemptor, so every engine must return kind=rejected."""
+    blocker = WorkloadSpec("hi", priority=9000, gpus_per_instance=2,
+                           cores_per_instance=16, preemptible=False)
+    cluster = Cluster(RTX4090_SERVER, 2)
+    for node in range(2):
+        for i in range(4):
+            mask = 0b11 << (2 * i)
+            cluster.bind(blocker, node, Placement(mask, mask, 0))
+    for engine in PARITY_ENGINES:
+        dec = TopoScheduler(cluster, engine=engine).plan(
+            WL3["B"], allow_normal=False).decision
+        assert dec.rejected, engine
 
 
 def test_fused_parity_across_commits():
@@ -266,7 +341,7 @@ def test_truncated_row_stays_dense_when_eligible_victims_fit():
     """A node with > MAX_DENSE_VICTIMS preemptible instances whose ELIGIBLE
     victims (priority < preemptor) fit the stored prefix must stay on the
     fused fast path, not fall back to per-node python sourcing."""
-    from repro.core.preemption_jax import fused_rows
+    from repro.core.preemption_jax import split_fused_nodes
 
     cpu500 = WorkloadSpec("cpu500", priority=500, gpus_per_instance=0,
                           cores_per_instance=8, preemptible=True,
@@ -289,13 +364,15 @@ def test_truncated_row_stays_dense_when_eligible_victims_fit():
     cluster = build()
     assert len([i for i in cluster.instances_on(0) if i.preemptible]) \
         > MAX_DENSE_VICTIMS
-    groups, overflow = fused_rows(cluster, mid, [0])
-    assert overflow == [] and len(groups) == 1   # truncated row, still dense
+    dcs = cluster.device_state().sync()
+    split = split_fused_nodes(dcs, {}, mid.priority)
+    # truncated row, still dense: no python fallback, no 2^16 re-dispatch
+    assert split.overflow == [] and split.wide == []
     want = _decision_key(TopoScheduler(build(), engine="imp")
                          .plan(mid, allow_normal=False).decision)
     got = _decision_key(TopoScheduler(cluster, engine="imp_batched")
                         .plan(mid, allow_normal=False).decision)
-    assert got == want == ("preempted", 0, got[2], got[3])
+    assert got == want == ("preempted", 0, got[2], got[3], got[4])
 
 
 @pytest.mark.parametrize("engine",
@@ -354,6 +431,66 @@ def test_pallas_running_argmax_matches_host_reduction():
         assert bscore[t] == pytest.approx(s_t)
         sel &= score[lo:hi] == s_t
         assert bidx[t] == lo + int(np.nonzero(sel)[0][0])
+
+
+def test_pallas_filtering_mask_input_masks_lanes():
+    """Lanes zeroed by the kernel's filtering-mask input must report tier 3
+    / -inf score and never win the per-tile argmax."""
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.kernels.topo_score import (K_INFEASIBLE, TopoRequest,
+                                          topo_score_argmax_pallas)
+
+    spec = RTX4090_SERVER
+    rng = np.random.default_rng(11)
+    n = 1500
+    cg = rng.integers(0, spec.all_gpu_mask + 1, n).astype(np.int32)
+    cc = rng.integers(0, spec.all_cg_mask + 1, n).astype(np.int32)
+    pr = rng.integers(0, 3000, n).astype(np.int32)
+    kk = rng.integers(0, 6, n).astype(np.int32)
+    ok = (rng.random(n) < 0.5).astype(np.int32)
+    req = TopoRequest(2, 2, 1, alpha=0.5)
+    base = topo_score_argmax_pallas(
+        jnp.asarray(cg), jnp.asarray(cc), jnp.asarray(pr), jnp.asarray(kk),
+        spec, req)
+    masked = topo_score_argmax_pallas(
+        jnp.asarray(cg), jnp.asarray(cc), jnp.asarray(pr), jnp.asarray(kk),
+        spec, req, ok=jnp.asarray(ok))
+    tier_b, tier_m = np.asarray(base[0]), np.asarray(masked[0])
+    score_m = np.asarray(masked[1])
+    off = ok == 0
+    assert np.all(tier_m[off] == 3) and np.all(np.isneginf(score_m[off]))
+    assert np.array_equal(tier_m[~off], tier_b[~off])
+    # the per-tile argmax only ever picks unmasked lanes
+    kmin, bidx = np.asarray(masked[2]), np.asarray(masked[5])
+    for t in range(len(kmin)):
+        if kmin[t] != K_INFEASIBLE:
+            assert ok[bidx[t]] == 1
+
+
+def test_pallas_engine_parity_with_mixed_eligibility():
+    """A node mixing eligible and ineligible victims must still match the
+    exact python engine (the eligible set is a prefix slice; the kernel's
+    filtering mask guards the lanes)."""
+    lo = WorkloadSpec("lo", priority=100, gpus_per_instance=1,
+                      cores_per_instance=8, preemptible=True)
+    hi = WorkloadSpec("hi", priority=2000, gpus_per_instance=1,
+                      cores_per_instance=8, preemptible=True)
+    mid = WorkloadSpec("mid", priority=900, gpus_per_instance=2,
+                       cores_per_instance=16, preemptible=False)
+
+    def build():
+        cluster = Cluster(RTX4090_SERVER, 1)
+        for i in range(4):
+            cluster.bind(lo if i % 2 else hi, 0,
+                         Placement(1 << i, 1 << i, 0))
+        cluster.bind(mid, 0, Placement(0b11 << 4, 0b11 << 4, 0))
+        return cluster
+
+    want = _decision_key(TopoScheduler(build(), engine="imp")
+                         .plan(mid, allow_normal=False).decision)
+    got = _decision_key(TopoScheduler(build(), engine="imp_pallas")
+                        .plan(mid, allow_normal=False).decision)
+    assert got == want
 
 
 def test_pallas_interpret_env_flag(monkeypatch):
