@@ -10,13 +10,18 @@ rows are tagged ``"interpret": true`` and the CI gate skips them).
 
 Workload classes match the paper: high-p-1000-4-card (B), low-p-500-2-card (C).
 
-Beyond the per-engine sourcing phase, three fused-path rows are recorded per
+Beyond the per-engine sourcing phase, four fused-path rows are recorded per
 workload (``metric`` field):
 
-* ``sourcing``     — the engine's sourcing phase (default, paper Table 5);
-* ``plan_e2e``     — filtering-INCLUSIVE end-to-end ``plan()`` wall time;
-* ``plan_batch8``  — amortized per-request wall time of an 8-request
-  ``plan_batch`` (one vmapped dispatch against one snapshot).
+* ``sourcing``        — the engine's sourcing phase (default, paper Table 5);
+* ``plan_e2e``        — filtering-INCLUSIVE end-to-end ``plan()`` wall time;
+* ``plan_normal_e2e`` — end-to-end ``plan()`` on a 60%-filled cluster where
+  the NORMAL cycle places the request (the diurnal-valley admission path;
+  one chained dispatch for the fused engine, recorded for ``imp`` too as
+  the host-loop reference);
+* ``plan_batch8``     — amortized per-request wall time of an 8-request
+  ``plan_batch`` (one vmapped dispatch against one snapshot, with the
+  PERSISTENT session reused across rounds).
 
 A ``warmup`` block tracks cold vs ``TopoScheduler(warmup=True)`` first-plan
 latency (cold P90 is compile-dominated; the warm numbers show construction
@@ -34,7 +39,8 @@ import time
 from repro.core.simulator import (SimConfig, build_saturated_cluster,
                                   run_latency_experiment,
                                   run_plan_batch_latency,
-                                  run_plan_latency_experiment)
+                                  run_plan_latency_experiment,
+                                  run_plan_normal_latency)
 
 from .common import FULL, emit, p
 
@@ -149,6 +155,24 @@ def run(full: bool = FULL) -> list[dict]:
                      "n": rep.preemptions, "hit_rate": rep.hit_rate})
         emit(f"table5_{label}_fused_plan_batch8", p50,
              f"per_request p90={p90:.1f}us")
+        # normal-cycle admission: fused chained dispatch vs the host loop
+        normal_base = {}
+        for engine in ("imp", "imp_batched"):
+            rep = run_plan_normal_latency(cfg, engine, wl, samples=samples)
+            p50, p90 = p(rep.sourcing_us, 50), p(rep.sourcing_us, 90)
+            normal_base[engine] = p50
+            rows.append({"workload": label, "engine": engine,
+                         "metric": "plan_normal_e2e", "p50_us": p50,
+                         "p90_us": p90, "n": len(rep.sourcing_us),
+                         # placed-decision topology-hit rate (preemptions
+                         # are 0 on this protocol, so the report property
+                         # would read 0)
+                         "hit_rate": rep.hits / max(1, len(rep.sourcing_us))})
+            emit(f"table5_{label}_{engine}_plan_normal_e2e", p50,
+                 f"p90={p90:.1f}us")
+        if normal_base.get("imp_batched"):
+            emit(f"table5_{label}_normal_fused_speedup", 0.0,
+                 f"fused_over_host={normal_base['imp'] / normal_base['imp_batched']:.2f}x")
     BENCH_JSON.write_text(json.dumps(
         {"protocol": "full" if full else "small",
          "num_nodes": cfg.num_nodes, "seed": cfg.seed, "samples": samples,

@@ -5,6 +5,8 @@ Re-runs the small-protocol Table 5 latency experiment for the fused
 identity check) and fails if
 
 * the fused sourcing P50 — or the filtering-inclusive end-to-end ``plan()``
+  P50, the normal-cycle ``plan_normal_e2e`` P50 (the chained
+  normal+placement dispatch), or the persistent-session ``plan_batch8``
   P50 — regresses more than ``MAX_REGRESSION``x over the committed
   ``BENCH_sourcing.json`` baseline, or
 * the fused hit rate diverges from the legacy engine at the same seed
@@ -26,7 +28,9 @@ import json
 import sys
 
 from repro.core.simulator import (SimConfig, run_latency_experiment,
-                                  run_plan_latency_experiment)
+                                  run_plan_batch_latency,
+                                  run_plan_latency_experiment,
+                                  run_plan_normal_latency)
 
 from .bench_sourcing_latency import BENCH_JSON
 from .common import p
@@ -80,6 +84,29 @@ def main() -> int:
             status = "ok" if ratio <= MAX_REGRESSION else "REGRESSION"
             print(f"{label}: fused plan_e2e p50 {e2e_p50:.0f}us vs baseline "
                   f"{ref_e2e['p50_us']:.0f}us ({ratio:.2f}x) [{status}]")
+            if ratio > MAX_REGRESSION:
+                failures += 1
+        ref_normal = base_rows.get((label, "imp_batched", "plan_normal_e2e"))
+        if ref_normal and ref_normal["p50_us"]:
+            rep = run_plan_normal_latency(cfg, "imp_batched", wl,
+                                          samples=samples)
+            n_p50 = p(rep.sourcing_us, 50)
+            ratio = n_p50 / (ref_normal["p50_us"] * norm)
+            status = "ok" if ratio <= MAX_REGRESSION else "REGRESSION"
+            print(f"{label}: fused plan_normal_e2e p50 {n_p50:.0f}us vs "
+                  f"baseline {ref_normal['p50_us']:.0f}us "
+                  f"({ratio:.2f}x) [{status}]")
+            if ratio > MAX_REGRESSION:
+                failures += 1
+        ref_batch = base_rows.get((label, "imp_batched", "plan_batch8"))
+        if ref_batch and ref_batch["p50_us"]:
+            rep = run_plan_batch_latency(cfg, "imp_batched", wl, batch=8)
+            b_p50 = p(rep.sourcing_us, 50)
+            ratio = b_p50 / (ref_batch["p50_us"] * norm)
+            status = "ok" if ratio <= MAX_REGRESSION else "REGRESSION"
+            print(f"{label}: persistent plan_batch8 p50 {b_p50:.0f}us vs "
+                  f"baseline {ref_batch['p50_us']:.0f}us "
+                  f"({ratio:.2f}x) [{status}]")
             if ratio > MAX_REGRESSION:
                 failures += 1
         if (fused.preemptions, fused.hits) != (legacy.preemptions, legacy.hits):

@@ -579,6 +579,11 @@ class DeviceClusterState:
       (free ∪ all stored victim masks), the popcount input of the fused
       Guaranteed-Filtering step.
 
+    ``slices`` exposes the static NUMA/socket slice layout of the SKU
+    (`placement_jax.SpecSlices`) that the device-side placement scorer —
+    the normal cycle and the winner's §3.4 mask selection, both fused into
+    the sourcing dispatch — popcounts these tensors against.
+
     The host `SourcingContext` stays as the *mirror*: it keeps the int64
     victim uids (decoded only for the winner) and the counts the host needs
     for wide/overflow routing.  Both subscribe to ``invalidate_node``, so a
@@ -601,8 +606,18 @@ class DeviceClusterState:
         #: host fast-path: when no node stores more than NARROW_M victims,
         #: per-plan wide/overflow routing is skipped entirely
         self.count_max = 0
+        #: monotonic state counter, bumped by every invalidation: entries
+        #: of ``plan_cache`` (per-preemptor routing splits + uploaded
+        #: index/patch device arrays for the delta-free fast path) record
+        #: the version they were built at and are ignored once it moves
+        self.version = 0
+        self.plan_cache: dict = {}
         self._dirty: set[int] = set(range(cluster.num_nodes))
-        cluster.add_dirty_listener(self._dirty.add)
+        cluster.add_dirty_listener(self._mark_dirty)
+
+    def _mark_dirty(self, node: int) -> None:
+        self._dirty.add(node)
+        self.version += 1
 
     def sync(self, flush: bool = True) -> "DeviceClusterState":
         """Bring the device view up to date with the live cluster.
@@ -646,3 +661,18 @@ class DeviceClusterState:
         """Rows whose device copy is stale (mirror is fresh after sync):
         deferred by ``sync(flush=False)`` for in-dispatch overlay."""
         return self._dirty
+
+    @property
+    def slices(self):
+        """The SKU's static NUMA/socket slice layout, device-resident.
+
+        Convenience accessor for the `repro.core.placement_jax.SpecSlices`
+        of this cluster's spec (per-NUMA GPU/CoreGroup mask columns, socket
+        one-hot, placement scope-membership matrix, lowest-bit selector
+        tables) — the layout the fused placement scorers are traced
+        against.  The jit evaluators resolve it per-spec via
+        ``spec_slices`` internally; this property returns the SAME cached
+        object for introspection and tests."""
+        from .placement_jax import spec_slices
+
+        return spec_slices(self.cluster.spec)

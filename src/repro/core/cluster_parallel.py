@@ -17,7 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from .cluster import (DRAIN_FIELDS, NODE_FIELDS, NS_NODE_ID, VICTIM_FIELDS)
+from .cluster import (DRAIN_FIELDS, NODE_FIELDS, NS_FREE_CG, NS_FREE_GPU,
+                      NS_NODE_ID, VF_CG, VF_GPU, VICTIM_FIELDS)
+from .placement_jax import normal_cycle_core, winner_place
 from .preemption_jax import (Request, _evaluate_subsets_core,
                              _fused_argmax_core, _fused_class_core,
                              combo_table, spec_constants)
@@ -136,9 +138,12 @@ def make_distributed_fused_source(
 
     The per-node filtering popcounts, subset evaluation and class
     reductions stay local to each device's node shard; only the final
-    argmax chain over the ``[N, 3]`` class winners crosses shards, which
-    XLA lowers to all-reduce collectives — the device→host traffic is seven
-    scalars regardless of cluster size.
+    argmax chain over the ``[N, 3]`` class winners crosses shards (XLA
+    all-reduce collectives) plus the one-row gather that feeds the winner
+    through the SAME §3.4 placement scorer the local fused path uses
+    (`placement_jax.winner_place`) — the device→host traffic is the
+    ``int32[WIN_FIELDS]`` winner vector, concrete GPU/CoreGroup masks
+    included, regardless of cluster size.
     """
     axes = tuple(mesh.axis_names)
     node_sharding = NamedSharding(mesh, P(None, axes))   # shard node axis 1
@@ -146,19 +151,63 @@ def make_distributed_fused_source(
     repl = NamedSharding(mesh, P())
 
     def fn(nodestate, victims, drain, thresh):
+        ng = jnp.int32(request.need_gpus)
+        nc = jnp.int32(request.need_cgs)
+        cpb = jnp.int32(request.cgs_per_bundle)
         cls = _fused_class_core(
-            nodestate, victims, drain, thresh,
-            jnp.int32(request.need_gpus), jnp.int32(request.need_cgs),
-            jnp.int32(request.cgs_per_bundle), jnp.float32(alpha),
-            spec=spec, m=m, narrow_gate=True)
-        return _fused_argmax_core(nodestate[NS_NODE_ID], cls,
-                                  jnp.float32(alpha))
+            nodestate, victims, drain, thresh, ng, nc, cpb,
+            jnp.float32(alpha), spec=spec, m=m, narrow_gate=True)
+        win = _fused_argmax_core(nodestate[NS_NODE_ID], cls,
+                                 jnp.float32(alpha))
+        return winner_place(win, nodestate[NS_FREE_GPU],
+                            nodestate[NS_FREE_CG], victims[VF_GPU],
+                            victims[VF_CG], ng, nc, cpb, spec=spec)
 
     return jax.jit(
         fn,
         in_shardings=(node_sharding, victim_sharding, node_sharding, repl),
         out_shardings=repl,
     )
+
+
+def make_distributed_normal_cycle(
+    mesh: jax.sharding.Mesh,
+    spec: ServerSpec,
+    request: Request,
+):
+    """jit the NORMAL scheduling cycle (`placement_jax.normal_cycle_core`)
+    with the node axis sharded over every mesh axis.
+
+    Per-node count screens, placement tiers and the blind degraded
+    fallback stay shard-local; the ``(tier, leftover, node)`` argmin chain
+    and the winner-row gather feeding the placement scorer reduce across
+    shards — the same scorer the single-host fused dispatch chains in
+    front of sourcing, so the no-preemption admission path scales to the
+    dry-run mesh too.
+    """
+    axes = tuple(mesh.axis_names)
+    node_sharding = NamedSharding(mesh, P(None, axes))
+    repl = NamedSharding(mesh, P())
+
+    def fn(nodestate):
+        return normal_cycle_core(
+            nodestate, jnp.int32(request.need_gpus),
+            jnp.int32(request.need_cgs),
+            jnp.int32(request.cgs_per_bundle), spec=spec)
+
+    return jax.jit(fn, in_shardings=(node_sharding,), out_shardings=repl)
+
+
+def lower_distributed_normal_cycle(
+    mesh: jax.sharding.Mesh,
+    spec: ServerSpec,
+    num_nodes: int = 65536,
+):
+    """Lower (without executing) the sharded normal cycle for the dry-run."""
+    request = Request(need_gpus=4, need_cgs=4, bundle_locality=True)
+    fn = make_distributed_normal_cycle(mesh, spec, request)
+    shape = jax.ShapeDtypeStruct((NODE_FIELDS, num_nodes), np.int32)
+    return fn.lower(shape)
 
 
 def distributed_fused_inputs(

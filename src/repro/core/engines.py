@@ -78,6 +78,17 @@ class EngineSpec:
     #: scheduler skips the host filter loop and calls ``source_all`` with
     #: ``nodes=None`` (evaluate the whole cluster)
     fused_filter: bool = False
+    #: the engine runs BOTH cycles of Algorithm 1 — the normal cycle and
+    #: §3.4 placement included — inside one dispatch: the scheduler calls
+    #: ``plan_fused`` instead of its host ``_plan_normal``/``_place_on``
+    #: loops and binds the decoded masks directly
+    fused_place: bool = False
+    #: fn(cluster_or_view, workload, alpha, allow_preempt) -> FusedPlanResult
+    #: (the chained normal+preemptive program behind ``fused_place``)
+    plan_fn: Callable | None = None
+    #: fn(cluster_or_view, workload) -> (node, Placement) | None — the
+    #: normal cycle alone as one device dispatch (the batch-plan path)
+    normal_fn: Callable | None = None
     #: fn(cluster, workloads, alpha) -> batch-sourcing session for
     #: ``plan_batch`` (one vmapped dispatch over the request axis); the
     #: session's ``source(view, workload, i)`` replaces ``source_all``
@@ -96,6 +107,15 @@ class EngineSpec:
         if self.batch_factory is None:
             return None
         return self.batch_factory(cluster, workloads, alpha)
+
+    def plan_fused(self, cluster, workload, alpha: float,
+                   allow_preempt: bool = True):
+        """Both Algorithm 1 cycles in one dispatch (``fused_place``)."""
+        return self.plan_fn(cluster, workload, alpha, allow_preempt)
+
+    def plan_normal(self, cluster, workload):
+        """The normal cycle alone as one device dispatch."""
+        return self.normal_fn(cluster, workload)
 
     def warmup(self, cluster, alpha: float) -> None:
         """Pre-compile jit buckets (no-op for engines without warmup_fn)."""
@@ -150,6 +170,9 @@ def register_engine(
     selector: Callable | None = None,
     needs_alpha: bool = False,
     fused_filter: bool = False,
+    fused_place: bool = False,
+    plan_fn: Callable | None = None,
+    normal_fn: Callable | None = None,
     batch_factory: Callable | None = None,
     warmup_fn: Callable | None = None,
 ):
@@ -161,10 +184,15 @@ def register_engine(
     signature ends in ``alpha=`` because it fuses the Eq. 2 selection into
     sourcing (``imp_batched``).  ``fused_filter=True`` additionally fuses
     Guaranteed Filtering into the dispatch: the scheduler stops filtering on
-    the host and passes ``nodes=None``.  ``batch_factory`` and ``warmup_fn``
-    wire the ``plan_batch`` vmapped session and the opt-in jit warm-up (see
-    `EngineSpec`).  Objects already satisfying `SourcingEngine` are
-    registered as-is.
+    the host and passes ``nodes=None``.  ``fused_place=True`` (with
+    ``plan_fn``/``normal_fn``) goes further still: the engine runs BOTH
+    Algorithm 1 cycles — normal-cycle argmin, Sorting, Eq. 2, and the §3.4
+    placement masks — inside its dispatch, so the scheduler's host
+    ``_plan_normal``/``_place_on`` loops collapse into the engine call.
+    ``batch_factory`` and ``warmup_fn`` wire the ``plan_batch`` vmapped
+    session (persistent across calls for ``imp_batched``) and the opt-in
+    jit warm-up (see `EngineSpec`).  Objects already satisfying
+    `SourcingEngine` are registered as-is.
     """
 
     def deco(obj):
@@ -179,6 +207,9 @@ def register_engine(
                 selector=selector,
                 needs_alpha=needs_alpha,
                 fused_filter=fused_filter,
+                fused_place=fused_place,
+                plan_fn=plan_fn,
+                normal_fn=normal_fn,
                 batch_factory=batch_factory,
                 warmup_fn=warmup_fn,
             )

@@ -16,6 +16,15 @@ piecewise score:
 IMP feasibility); ``place`` additionally commits to concrete GPU/CoreGroup
 bitmasks.  ``place_blind`` is the topology-UNaware baseline (lowest free index
 first) that reproduces the default/Gödel-standard allocator behaviour.
+
+This module is the HOST implementation and the parity oracle: the fused
+scheduling path evaluates the same tier feasibility, scope choice, and
+lowest-free-bit mask selection as vectorized int32 bit math inside the
+sourcing dispatch (`repro.core.placement_jax` — ``device_best_tier`` /
+``device_place`` / ``device_place_blind`` are the bitwise twins), so
+``plan()`` never walks these loops for ``fused_place`` engines.
+``tests/test_placement_device.py`` pins host-vs-device equivalence across
+SKUs, seeds, and partially-drained masks.
 """
 from __future__ import annotations
 
@@ -37,7 +46,13 @@ def _bits(mask: int, n: int) -> list[int]:
     return [i for i in range(n) if mask >> i & 1]
 
 
-def _lowest_bits(mask: int, k: int, n: int) -> int:
+def _lowest_bits(mask: int, k: int, n: int) -> int | None:
+    """Lowest ``k`` set bits of ``mask``, or ``None`` when fewer are set.
+
+    ``None`` (not an exception) keeps the feasibility API uniform: a caller
+    racing against a concurrent allocation sees an infeasible placement,
+    not a crashed planner.
+    """
     out = 0
     for i in range(n):
         if k == 0:
@@ -46,7 +61,7 @@ def _lowest_bits(mask: int, k: int, n: int) -> int:
             out |= 1 << i
             k -= 1
     if k:
-        raise ValueError("not enough free bits")
+        return None
     return out
 
 
@@ -184,11 +199,15 @@ def place(
         if take <= 0:
             continue
         g_sel = _lowest_bits(u_free_g, take, spec.num_gpus)
+        if g_sel is None:  # raced against a concurrent allocation
+            return None
         gpu_mask |= g_sel
         remaining_gpus -= take
         if bundle_locality and cgs_per_bundle:
             c_take = min(take * cgs_per_bundle, remaining_cgs)
             c_sel = _lowest_bits(u_free_c, c_take, spec.num_coregroups)
+            if c_sel is None:
+                return None
             cg_mask |= c_sel
             remaining_cgs -= c_take
     # remaining CoreGroups (non-bundle leftovers or locality-free) from scope order
@@ -198,7 +217,10 @@ def place(
             avail = u_free_c.bit_count()
             take = min(avail, remaining_cgs)
             if take:
-                cg_mask |= _lowest_bits(u_free_c, take, spec.num_coregroups)
+                c_sel = _lowest_bits(u_free_c, take, spec.num_coregroups)
+                if c_sel is None:
+                    return None
+                cg_mask |= c_sel
                 remaining_cgs -= take
             if remaining_cgs == 0:
                 break
@@ -219,6 +241,8 @@ def place_blind(
         return None
     gpu_mask = _lowest_bits(free_gpu_mask, need_gpus, spec.num_gpus) if need_gpus else 0
     cg_mask = _lowest_bits(free_cg_mask, need_cgs, spec.num_coregroups) if need_cgs else 0
+    if gpu_mask is None or cg_mask is None:
+        return None
     return Placement(gpu_mask=gpu_mask, cg_mask=cg_mask,
                      tier=achieved_tier(spec, gpu_mask))
 

@@ -13,16 +13,23 @@ Pipeline per scheduling attempt:
      Eq. 1/Eq. 2.
    * *Bind* — evict the victims and place the preemptor.
 
-For host engines, Filtering is a python loop over the nodes and Sorting is
-sourced per node.  For engines registered with ``fused_filter=True``
-(``imp_batched``, the default fast path) the scheduler does NO per-node host
-work at all: Filtering → Sorting → Eq. 2 selection run as ONE jit dispatch
-over the cluster's device-resident state (`Cluster.device_state`) — the
-fully-drained masks are popcounted on device, copy-on-write view deltas are
-overlaid in-dispatch, and only the winner's indices come back to the host.
-``invalidate_node`` (hit by every bind/evict/restore) marks single device
-rows stale; they re-upload as one ``.at[rows].set()`` scatter on the next
-plan, so cluster state never leaves the accelerator wholesale.
+For host engines, the normal cycle and Filtering are python loops over the
+nodes and Sorting is sourced per node.  For engines registered with
+``fused_place=True`` (``imp_batched``, the default fast path) the scheduler
+does NO per-node host work at all: the ENTIRE Algorithm 1 — normal-cycle
+argmin, Guaranteed Filtering, Sorting, Eq. 2 selection, and the §3.4
+placement mask construction (`repro.core.placement_jax`) — runs as ONE jit
+dispatch over the cluster's device-resident state (`Cluster.device_state`).
+The fully-drained masks are popcounted on device, copy-on-write view deltas
+are overlaid in-dispatch, the preemptive subset sweep executes only when
+the normal cycle finds nothing (``lax.cond``), and the winner comes back as
+a handful of int32s CARRYING ITS CONCRETE GPU/CoreGroup masks — the host
+never re-runs ``place()`` on the winning node.  ``fused_filter`` engines
+without ``fused_place`` keep the host normal cycle but fuse Filtering into
+sourcing (``nodes=None``).  ``invalidate_node`` (hit by every
+bind/evict/restore) marks single device rows stale; they re-upload as one
+``.at[rows].set()`` scatter on the next plan, so cluster state never leaves
+the accelerator wholesale.
 
 The engine list above is rendered from the live registry
 (``repro.core.engines.registered_engines``); custom engines registered with
@@ -43,14 +50,17 @@ preemptors against one shared view so the decisions compose; with a
 dispatch vmapped over a request axis, and each plan's sequential
 planned-eviction semantics are preserved by masking its delta nodes out of
 the precomputed tensors on device and re-sourcing only those rows.
-``schedule`` / ``preempt`` / ``schedule_or_preempt`` are plan-and-commit
-conveniences, and the deprecated ``undo(decision)`` shim delegates to
-``Transaction.rollback()``.
+``plan_batch`` sourcing sessions PERSIST across calls for ``imp_batched``
+(invalidated through ``invalidate_node``), so bursty admission reuses the
+big vmapped dispatch.  ``schedule`` / ``preempt`` / ``schedule_or_preempt``
+are plan-and-commit conveniences, and the deprecated ``undo(decision)``
+shim delegates to ``Transaction.rollback()``.
 
 Latency accounting mirrors the paper's overhead analysis: we time the
 candidate-sourcing phase ("the primary contributor to time overhead").  For
 ``fused_filter`` engines the number necessarily INCLUDES Filtering — it
-happens inside the same dispatch.
+happens inside the same dispatch — and for ``fused_place`` engines it spans
+the whole chained dispatch, normal cycle and placement included.
 """
 from __future__ import annotations
 
@@ -75,16 +85,34 @@ class _LazyBatchSession:
     vmapped all-requests dispatch) until a plan actually reaches the
     preemption phase — a batch fully satisfied by the normal cycle never
     pays for it.  Safe because the session snapshots the BASE cluster,
-    which planning never mutates."""
+    which planning never mutates.
 
-    def __init__(self, factory) -> None:
+    For ``fused_place`` engines, ``plan`` keeps that laziness on the
+    device path: while no plan has needed preemption, each plan is one
+    cheap standalone normal-cycle dispatch (``normal_fn``); the first
+    normal-cycle failure constructs the session, and every plan from then
+    on is the session's single merged normal+preemptive dispatch."""
+
+    def __init__(self, factory, normal_fn=None) -> None:
         self._factory = factory
+        self._normal_fn = normal_fn
         self._session = None
 
     def source(self, view, workload, index):
         if self._session is None:
             self._session = self._factory()
         return self._session.source(view, workload, index)
+
+    def plan(self, view, workload, index):
+        if self._session is None and self._normal_fn is not None:
+            got = self._normal_fn(view, workload)
+            if got is not None:
+                from .preemption_jax import FusedPlanResult
+
+                return FusedPlanResult("placed", got[0], got[1])
+        if self._session is None:
+            self._session = self._factory()
+        return self._session.plan(view, workload, index)
 
 
 class TopoScheduler:
@@ -120,6 +148,14 @@ class TopoScheduler:
         self.topology_aware = (
             True if topology_aware_placement is None else topology_aware_placement
         )
+        # fused_place engines run BOTH Algorithm 1 cycles (normal-cycle
+        # argmin + Sorting + Eq. 2 + §3.4 placement masks) inside one
+        # dispatch; the host _plan_normal/_place_on loops are skipped.  The
+        # blind-allocator ablation keeps the host path (the device scorer
+        # is the topology-aware allocator).
+        self._fused_place = (self.topology_aware
+                             and bool(getattr(self._engine, "fused_place",
+                                              False)))
         self.sourcing_us_log: list[float] = []
         self.listeners: list[Callable[[SchedulingDecision, str], None]] = []
         if warmup:
@@ -256,21 +292,76 @@ class TopoScheduler:
             return SchedulingDecision(kind="rejected", workload=workload,
                                       sourcing_us=sourcing_us), None
         chosen = self._engine.select(candidates, self.alpha)
-        for uid in chosen.victims:
-            view.plan_evict(uid)
-        placement = self._place_on(workload, chosen.node, view)
-        if placement is None:  # cannot happen if engines are correct
-            raise RuntimeError("victim set freed insufficient resources")
-        planned = view.plan_bind(workload, chosen.node, placement)
-        return SchedulingDecision(
-            kind="preempted", workload=workload, node=chosen.node,
-            placement=placement, hit=self._hit(workload, placement),
-            victims=chosen.victims, sourcing_us=sourcing_us,
+        # fused engines already placed the winner on device (§3.4 scorer in
+        # the same dispatch): bind the decoded masks instead of re-running
+        # the host place() loops on the winning node
+        placement = None
+        if self.topology_aware:
+            placement = getattr(candidates, "placements", {}).get(
+                (chosen.node, chosen.victims))
+        return self._bind_preemption(
+            workload, view, chosen.node, chosen.victims, placement,
+            sourcing_us,
             # fused engines return a winner shortlist but report the true
             # evaluated-candidate count via CandidateShortlist.n_candidates
-            num_candidates=getattr(candidates, "n_candidates",
-                                   len(candidates)),
+            getattr(candidates, "n_candidates", len(candidates)))
+
+    def _bind_preemption(
+        self, workload: WorkloadSpec, view: ClusterView, node: int,
+        victims: tuple[int, ...], placement: Placement | None,
+        sourcing_us: float, num_candidates: int,
+    ) -> tuple[SchedulingDecision, int | None]:
+        """Shared preemption tail: plan the evictions, fall back to the
+        host placement loops when no device masks came back, and bind."""
+        for uid in victims:
+            view.plan_evict(uid)
+        if placement is None:
+            placement = self._place_on(workload, node, view)
+        if placement is None:  # cannot happen if engines are correct
+            raise RuntimeError("victim set freed insufficient resources")
+        planned = view.plan_bind(workload, node, placement)
+        return SchedulingDecision(
+            kind="preempted", workload=workload, node=node,
+            placement=placement, hit=self._hit(workload, placement),
+            victims=tuple(victims), sourcing_us=sourcing_us,
+            num_candidates=num_candidates,
         ), planned.uid
+
+    def _plan_fused(
+        self, workload: WorkloadSpec, view: ClusterView,
+        allow_preempt: bool, session=None, index: int = 0,
+    ) -> tuple[SchedulingDecision, int | None]:
+        """One-dispatch Algorithm 1 for ``fused_place`` engines.
+
+        The engine's chained program (or the batch session's merged
+        per-request dispatch) returns either the normal-cycle winner or
+        the preemption winner, both WITH concrete placement masks from the
+        device §3.4 scorer — no host node loop, no host ``place()``.  The
+        recorded ``sourcing_us`` spans the whole dispatch (normal cycle
+        and Filtering included, they are the same program)."""
+        t0 = time.perf_counter()
+        if session is not None:
+            res = session.plan(view, workload, index)
+        else:
+            res = self._engine.plan_fused(view, workload, self.alpha,
+                                          allow_preempt)
+        sourcing_us = (time.perf_counter() - t0) * 1e6
+        self.sourcing_us_log.append(sourcing_us)
+        if res.kind == "rejected":
+            return SchedulingDecision(kind="rejected", workload=workload,
+                                      sourcing_us=sourcing_us,
+                                      num_candidates=res.n_candidates), None
+        if res.kind == "placed":
+            planned = view.plan_bind(workload, res.node, res.placement)
+            return SchedulingDecision(
+                kind="placed", workload=workload, node=res.node,
+                placement=res.placement,
+                hit=self._hit(workload, res.placement),
+                sourcing_us=sourcing_us), planned.uid
+        # res.placement is None for python-fallback winners: host place()
+        return self._bind_preemption(
+            workload, view, res.node, res.victims, res.placement,
+            sourcing_us, res.n_candidates)
 
     # ---- the transactional entry points --------------------------------------------
     def plan(self, workload: WorkloadSpec, *, view: ClusterView | None = None,
@@ -288,18 +379,36 @@ class TopoScheduler:
         view = view if view is not None else ClusterView(self.cluster)
         decision: SchedulingDecision | None = None
         planned_uid: int | None = None
-        if allow_normal:
-            normal = self._plan_normal(workload, view)
-            if normal is not None:
-                node, placement = normal
-                planned_uid = view.plan_bind(workload, node, placement).uid
-                decision = SchedulingDecision(
-                    kind="placed", workload=workload, node=node,
-                    placement=placement, hit=self._hit(workload, placement),
-                )
-        if decision is None and allow_preempt:
-            decision, planned_uid = self._plan_preempt(
-                workload, view, session=_session, index=_index)
+        if (self._fused_place and allow_normal
+                and (_session is None or hasattr(_session, "plan"))):
+            # end-to-end device-resident Algorithm 1: BOTH cycles — the
+            # normal-cycle argmin, Filtering, Sorting, Eq. 2 selection AND
+            # the §3.4 placement masks — run in ONE dispatch (the engine's
+            # chained program, or the batch session's merged per-request
+            # dispatch)
+            decision, planned_uid = self._plan_fused(
+                workload, view, allow_preempt, session=_session,
+                index=_index)
+        else:
+            if allow_normal:
+                # fused_place engines run the normal cycle on device even
+                # when a custom session lacks the merged plan; host
+                # engines loop here
+                normal = (self._engine.plan_normal(view, workload)
+                          if self._fused_place
+                          else self._plan_normal(workload, view))
+                if normal is not None:
+                    node, placement = normal
+                    planned_uid = view.plan_bind(workload, node,
+                                                 placement).uid
+                    decision = SchedulingDecision(
+                        kind="placed", workload=workload, node=node,
+                        placement=placement,
+                        hit=self._hit(workload, placement),
+                    )
+            if decision is None and allow_preempt:
+                decision, planned_uid = self._plan_preempt(
+                    workload, view, session=_session, index=_index)
         if decision is None:
             decision = SchedulingDecision(kind="rejected", workload=workload)
         return Transaction(cluster=self.cluster, decision=decision,
@@ -331,7 +440,9 @@ class TopoScheduler:
                     # actually reaches the preemption phase
                     batch = tuple(workloads)
                     session = _LazyBatchSession(
-                        lambda: starter(self.cluster, batch, self.alpha))
+                        lambda: starter(self.cluster, batch, self.alpha),
+                        normal_fn=(self._engine.plan_normal
+                                   if self._fused_place else None))
                 else:
                     # custom engine object: honor whatever it returns
                     session = starter(self.cluster, tuple(workloads),

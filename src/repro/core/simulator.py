@@ -296,6 +296,46 @@ def run_plan_latency_experiment(
     return report
 
 
+def run_plan_normal_latency(
+    cfg: SimConfig,
+    engine: EngineName,
+    preemptor_name: str,
+    samples: int = 50,
+    fill: float = 0.6,
+) -> HitRateReport:
+    """Normal-cycle (no-preemption) end-to-end ``plan()`` latency.
+
+    The cluster is filled to ``fill`` of the Table 3 saturation mix so the
+    request resolves in the normal scheduling cycle — the diurnal-valley
+    admission path.  Every sample is a pure ``plan()`` read (never
+    committed), so the state is identical across samples; ``sourcing_us``
+    holds the plan wall times of PLACED decisions.  For ``fused_place``
+    engines this is the single chained dispatch; for host engines it is
+    the python node loop + ``place()``.
+    """
+    report = HitRateReport(engine=engine)
+    workloads = table3_workloads()
+    wl = {w.name: w for w in workloads}[preemptor_name]
+    scale = cfg.num_nodes / 100.0 * fill
+    counts = {k: max(0, round(v * scale))
+              for k, v in TABLE3_INITIAL_INSTANCES.items()}
+    cluster = build_saturated_cluster(cfg, workloads, counts)
+    sched = TopoScheduler(cluster, engine=engine, alpha=cfg.alpha)
+    dec = sched.plan(wl).decision          # jit warm-up, excluded
+    if not dec.placed:
+        raise RuntimeError(
+            f"fill={fill} leaves no room for {preemptor_name}: "
+            "normal-cycle protocol needs a placeable request")
+    for _ in range(samples):
+        t0 = time.perf_counter()
+        txn = sched.plan(wl)
+        plan_us = (time.perf_counter() - t0) * 1e6
+        if txn.decision.placed:
+            report.hits += int(txn.decision.hit)
+            report.sourcing_us.append(plan_us)
+    return report
+
+
 def run_plan_batch_latency(
     cfg: SimConfig,
     engine: EngineName,

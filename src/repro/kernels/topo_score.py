@@ -8,10 +8,14 @@ constants baked into the kernel — and the Eq. 1 score is pure VPU math.  One
 grid step scores a (8, 128) tile of subsets from VMEM; a 100k-subset sourcing
 wave is a handful of grid steps.
 
-Two kernels share the tier/score math:
+Three kernels share the tier/score math:
 
 * ``topo_score_pallas``        — tier + Eq. 1 score per subset (dense out).
-* ``topo_score_argmax_pallas`` — same, plus a *per-tile running argmax*:
+* ``placement_tier_pallas``    — per-NODE placement tier over free masks:
+  the VPU mirror of the device placement scorer (`placement_jax`) that the
+  fused dispatch chains in front of sourcing (§3.4 Sorting / normal cycle).
+* ``topo_score_argmax_pallas`` — same tier math, plus a *per-tile running
+  argmax*:
   each grid step also reduces its tile to (smallest feasible subset size,
   best tier, best score, flat index of that winner), so the ``imp_pallas``
   engine evaluates every subset size in ONE dispatch and only scans the
@@ -265,6 +269,53 @@ def topo_score_argmax_pallas(
         interpret=interpret,
     )(cg2, cc2, pr2, kk2, ok2)
     return tier.reshape(-1)[:n], score.reshape(-1)[:n], kmin, btier, bscore, bidx
+
+
+def _place_tier_kernel(free_gpu_ref, free_cg_ref, tier_ref, *,
+                       spec: ServerSpec, req: TopoRequest):
+    """Placement-tier tile: each lane is one NODE's free masks (not a
+    victim subset) — the VPU mirror of the normal-cycle / §3.4 tier
+    scorer (`repro.core.placement_jax.best_tier_counts`)."""
+    tier, _ = _tier_score(free_gpu_ref[...], free_cg_ref[...],
+                          jnp.zeros_like(free_gpu_ref[...]),
+                          spec=spec, req=req)
+    tier_ref[...] = tier
+
+
+def placement_tier_pallas(
+    free_gpu: jnp.ndarray,       # int32[n] free-GPU mask per node
+    free_cg: jnp.ndarray,        # int32[n] free-CoreGroup mask per node
+    spec: ServerSpec,
+    req: TopoRequest,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Per-node placement tier (0/1/2, 3 = infeasible) on the TPU VPU.
+
+    Mirrors the device placement scorer that the fused dispatch chains in
+    front of sourcing: popcounts of the per-NUMA free-mask slices with the
+    numa masks baked in as compile-time constants.  Bitwise-matching
+    ``placement.best_tier`` for the request's ``(need_gpus, need_cgs,
+    cgs_per_bundle)`` encoding; the normal-cycle argmin over ``(tier,
+    leftover, node)`` is host/XLA reduction work on the dense output.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    n = free_gpu.shape[0]
+    tile = ROWS_PER_TILE * LANES
+    n_pad = -(-n // tile) * tile
+    fg2 = _tiled(free_gpu, 0, n_pad, tile)
+    fc2 = _tiled(free_cg, 0, n_pad, tile)
+    blk = pl.BlockSpec((None, ROWS_PER_TILE, LANES), lambda i: (i, 0, 0))
+    kernel = partial(_place_tier_kernel, spec=spec, req=req)
+    tier = pl.pallas_call(
+        kernel,
+        grid=(n_pad // tile,),
+        in_specs=[blk, blk],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct(fg2.shape, jnp.int32),
+        interpret=interpret,
+    )(fg2, fc2)
+    return tier.reshape(-1)[:n]
 
 
 # ---------------------------------------------------------------------------------

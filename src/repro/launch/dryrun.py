@@ -182,10 +182,12 @@ def _write(path: str, rec: dict) -> None:
 def run_scheduler_cell(mesh_kind: str, out_dir: str, force: bool = False) -> dict:
     """Dry-run the distributed candidate sourcing (cluster_parallel) itself.
 
-    Lowers both the per-size legacy sweep and the fused single-dispatch
-    evaluator (all subset sizes + on-device Eq. 2 argmax) over the mesh.
+    Lowers the per-size legacy sweep, the fused single-dispatch evaluator
+    (all subset sizes + on-device Eq. 2 argmax + winner placement), and the
+    sharded normal-cycle placement scorer over the mesh.
     """
     from repro.core.cluster_parallel import (lower_distributed_fused_source,
+                                             lower_distributed_normal_cycle,
                                              lower_distributed_source)
     from repro.core.topology import RTX4090_SERVER
 
@@ -212,6 +214,13 @@ def run_scheduler_cell(mesh_kind: str, out_dir: str, force: bool = False) -> dic
         rec["fused"] = {"compile_s": round(time.time() - t0, 2),
                         "memory": _memory_dict(fused.memory_analysis()),
                         "hlo": hlo_util.summarize(fused.as_text())}
+        t0 = time.time()
+        normal = lower_distributed_normal_cycle(mesh,
+                                                RTX4090_SERVER).compile()
+        rec["normal_cycle"] = {
+            "compile_s": round(time.time() - t0, 2),
+            "memory": _memory_dict(normal.memory_analysis()),
+            "hlo": hlo_util.summarize(normal.as_text())}
     except Exception as e:  # noqa: BLE001
         rec.update(status="error", error=f"{type(e).__name__}: {e}",
                    traceback=traceback.format_exc()[-4000:])

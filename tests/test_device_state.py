@@ -155,5 +155,19 @@ def test_undo_shim_warns_deprecation():
     sched = TopoScheduler(cluster, engine="imp_batched")
     dec = sched.preempt(WL3["B"])
     assert dec.preempted
-    with pytest.warns(DeprecationWarning, match="Transaction.rollback"):
+    with pytest.warns(DeprecationWarning, match="Transaction.rollback") as rec:
         sched.undo(dec)
+    # stacklevel=2: the warning must blame THIS file (the caller), not the
+    # shim's own frame inside scheduler.py
+    assert rec[0].filename == __file__
+
+
+def test_undo_shim_not_reexported():
+    """The deprecated shim is a method-level compat hook only: nothing in
+    the package re-exports an ``undo`` symbol."""
+    import repro
+    import repro.core as core
+
+    assert "undo" not in getattr(core, "__all__", ())
+    assert not hasattr(core, "undo")
+    assert not hasattr(repro, "undo")
