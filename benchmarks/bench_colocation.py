@@ -1,0 +1,89 @@
+"""Co-location day-cycle A/B (paper §1/§2.3, Fig. 2 headline).
+
+Runs one full simulated day on the Table 3 mix through the event-driven
+co-location engine twice — the topology-aware fused ``imp_batched`` engine
+vs the topology-unaware ``godel`` baseline, SAME seeded arrival stream —
+and writes ``BENCH_colocation.json`` at the repo root:
+
+* ``uplift``            — scheduled-performance-integral uplift of the
+  aware engine over the baseline (the paper reports +55% for the
+  preemption-scheduled slice; ``preemptor_uplift`` is that slice here);
+* per-engine day totals (hit rate, preemption/requeue counts,
+  requeue-success rate, offline goodput);
+* ``plan_p50_us_per_hour`` — the per-hour P50 plan dispatch latency of the
+  aware engine (the long-horizon workload that amortizes the persistent
+  batch session and the device-resident state across thousands of plans).
+
+``benchmarks.check_colocation_regression`` gates CI on this file.
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_colocation``
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core.colocation import ColocationConfig, compare_day_cycle
+
+from .common import FULL, emit
+
+BENCH_JSON = Path(__file__).parent.parent / "BENCH_colocation.json"
+
+ENGINES = ("imp_batched", "godel")
+
+
+def day_config(full: bool = FULL, num_nodes: int | None = None,
+               horizon_hours: float = 24.0, seed: int = 0) -> ColocationConfig:
+    return ColocationConfig(
+        num_nodes=num_nodes if num_nodes is not None else (41 if full else 24),
+        seed=seed, horizon_hours=horizon_hours, warmup=True)
+
+
+def report_payload(rep) -> dict:
+    return {
+        "scheduled_perf": rep.scheduled_perf,
+        "preemptor_perf": rep.preemptor_perf,
+        "offline_goodput": rep.offline_goodput,
+        "hit_rate": rep.hit_rate,
+        "hits": rep.hits,
+        "preemptions": rep.preemptions,
+        "placements": rep.placements,
+        "failures": rep.failures,
+        "requeued": rep.requeued,
+        "requeue_replanned": rep.requeue_replanned,
+        "requeue_success_rate": rep.requeue_success_rate,
+        "plan_p50_us": rep.plan_p50_us,
+        "plan_p50_us_per_hour": [r.plan_p50_us for r in rep.hours],
+    }
+
+
+def run(full: bool = FULL, write: bool = True) -> dict:
+    cfg = day_config(full)
+    ab = compare_day_cycle(cfg, engines=ENGINES)
+    payload = {
+        "num_nodes": cfg.num_nodes,
+        "seed": cfg.seed,
+        "horizon_hours": cfg.horizon_hours,
+        "uplift": ab["uplift"],
+        "preemptor_uplift": ab["preemptor_uplift"],
+        "goodput_uplift": ab["goodput_uplift"],
+        "engines": {name: report_payload(rep)
+                    for name, rep in ab["reports"].items()},
+    }
+    if write:
+        BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
+    aware, base = (payload["engines"][e] for e in ENGINES)
+    emit("colocation_uplift", 0.0,
+         f"scheduled_perf +{payload['uplift'] * 100:.1f}% "
+         f"preemptor +{payload['preemptor_uplift'] * 100:.1f}%")
+    emit("colocation_aware", aware["plan_p50_us"],
+         f"perf={aware['scheduled_perf']:.0f} hit={aware['hit_rate']:.2f} "
+         f"requeue={aware['requeue_replanned']}/{aware['requeued']}")
+    emit("colocation_baseline", base["plan_p50_us"],
+         f"perf={base['scheduled_perf']:.0f} hit={base['hit_rate']:.2f} "
+         f"requeue={base['requeue_replanned']}/{base['requeued']}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

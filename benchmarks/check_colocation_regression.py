@@ -1,0 +1,100 @@
+"""CI gate for the co-location day-cycle A/B (next to the sourcing gate).
+
+Re-runs the committed ``BENCH_colocation.json`` protocol (same nodes, seed,
+horizon) and fails if
+
+* the topology-aware engine no longer beats the topology-unaware baseline
+  on the scheduled-performance integral (``uplift <= 0``),
+* the victim requeue lifecycle stopped being exercised (no preempted
+  offline job was requeued AND successfully replanned),
+* the aware engine's deterministic day metrics drift from the committed
+  baseline (the day cycle is seeded end to end: decisions, and therefore
+  the integrals, must reproduce bit-for-bit on any machine), or
+* the per-hour P50 plan latency regresses more than ``MAX_REGRESSION``x
+  over the committed run, machine-normed via the baseline engine's host
+  sourcing latency (clamped >= 1 so a fast machine never tightens the
+  gate).
+
+Run: ``PYTHONPATH=src python -m benchmarks.check_colocation_regression``
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+from .bench_colocation import BENCH_JSON, ENGINES, day_config, report_payload
+
+MAX_REGRESSION = 2.0
+REL_TOL = 1e-6
+
+
+def main() -> int:
+    if not BENCH_JSON.exists():
+        print(f"FAIL: no committed baseline at {BENCH_JSON}")
+        return 1
+    base = json.loads(BENCH_JSON.read_text())
+    from repro.core.colocation import compare_day_cycle
+
+    cfg = day_config(num_nodes=int(base["num_nodes"]),
+                     horizon_hours=float(base["horizon_hours"]),
+                     seed=int(base["seed"]))
+    ab = compare_day_cycle(cfg, engines=ENGINES)
+    aware_name, baseline_name = ENGINES
+    aware = report_payload(ab["reports"][aware_name])
+    failures = 0
+
+    uplift = ab["uplift"]
+    status = "ok" if uplift > 0 else "REGRESSION"
+    print(f"scheduled-performance uplift {aware_name} vs {baseline_name}: "
+          f"{uplift * 100:+.1f}% (preemptor slice "
+          f"{ab['preemptor_uplift'] * 100:+.1f}%) [{status}]")
+    if uplift <= 0:
+        failures += 1
+
+    rq, rp = aware["requeued"], aware["requeue_replanned"]
+    status = "ok" if (rq > 0 and rp > 0) else "FAIL"
+    print(f"requeue lifecycle: {rp}/{rq} victims replanned [{status}]")
+    if not (rq > 0 and rp > 0):
+        failures += 1
+
+    committed = base["engines"][aware_name]
+    for metric in ("scheduled_perf", "preemptor_perf", "offline_goodput"):
+        got, want = aware[metric], committed[metric]
+        ok = math.isclose(got, want, rel_tol=REL_TOL)
+        print(f"{aware_name} {metric}: {got:.3f} vs committed {want:.3f} "
+              f"[{'ok' if ok else 'DRIFT'}]")
+        if not ok:
+            failures += 1
+    for metric in ("preemptions", "hits", "requeued", "requeue_replanned",
+                   "placements", "failures"):
+        got, want = aware[metric], committed[metric]
+        ok = got == want
+        print(f"{aware_name} {metric}: {got} vs committed {want} "
+              f"[{'ok' if ok else 'DRIFT'}]")
+        if not ok:
+            failures += 1
+
+    # latency: machine-normed via the host baseline engine
+    base_ref = base["engines"][baseline_name].get("plan_p50_us", 0.0)
+    base_now = report_payload(ab["reports"][baseline_name])["plan_p50_us"]
+    ref = committed.get("plan_p50_us", 0.0)
+    if ref and base_ref:
+        norm = max(1.0, base_now / base_ref)
+        ratio = aware["plan_p50_us"] / (ref * norm)
+        status = "ok" if ratio <= MAX_REGRESSION else "REGRESSION"
+        print(f"{aware_name} plan p50 {aware['plan_p50_us']:.0f}us vs "
+              f"committed {ref:.0f}us (machine norm {norm:.2f}, "
+              f"{ratio:.2f}x) [{status}]")
+        if ratio > MAX_REGRESSION:
+            failures += 1
+
+    if failures:
+        print(f"FAIL: {failures} colocation gate(s) tripped")
+        return 1
+    print("co-location day cycle within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,6 +8,7 @@ paper-scale protocol (100 nodes, 100x50 preemptions).
   fig10_*   — per-workload sourcing overhead (paper Fig 10)
   fig9_*    — preemption timeline (paper Fig 9)
   fig8_*    — allocation snapshots (paper Fig 8)
+  colocation_* — day-cycle co-location A/B (paper §1/§2.3, Fig 2 headline)
   roofline_* — §Roofline terms per (arch x shape) from the dry-run
 """
 from __future__ import annotations
@@ -16,16 +17,16 @@ import time
 
 
 def main() -> None:
-    from . import (bench_allocation_snapshot, bench_hit_rate,
-                   bench_instance_timeline, bench_roofline,
+    from . import (bench_allocation_snapshot, bench_colocation,
+                   bench_hit_rate, bench_instance_timeline, bench_roofline,
                    bench_scheduler_hillclimb, bench_sourcing_latency,
                    bench_workload_overhead)
 
     print("name,us_per_call,derived")
     for mod in (bench_hit_rate, bench_sourcing_latency,
                 bench_workload_overhead, bench_instance_timeline,
-                bench_allocation_snapshot, bench_scheduler_hillclimb,
-                bench_roofline):
+                bench_allocation_snapshot, bench_colocation,
+                bench_scheduler_hillclimb, bench_roofline):
         t0 = time.time()
         mod.run()
         print(f"# {mod.__name__} done in {time.time() - t0:.1f}s", flush=True)

@@ -1,6 +1,8 @@
 """Core: the paper's contribution — FlexTopo + topology-aware preemption."""
 from .cluster import (MAX_DENSE_VICTIMS, Cluster, ClusterArrays, ClusterView,
                       DeviceClusterState, SourcingContext)
+from .colocation import (ColocationConfig, ColocationReport, ColocationSim,
+                         OfflineJob, compare_day_cycle, run_day_cycle)
 from .decisions import SchedulingDecision, Transaction, TransactionError
 from .engines import (EngineName, SourcingEngine, UnknownEngineError,
                       get_engine, register_engine, registered_engines)
@@ -15,7 +17,9 @@ from .workload import (Instance, TopoPolicy, WorkloadSpec, table1_workloads,
 
 __all__ = [
     "Cluster", "ClusterArrays", "ClusterView", "DeviceClusterState",
-    "SourcingContext", "MAX_DENSE_VICTIMS", "FlexTopo", "FlexTopoMasks",
+    "SourcingContext", "MAX_DENSE_VICTIMS", "ColocationConfig",
+    "ColocationReport", "ColocationSim", "OfflineJob", "compare_day_cycle",
+    "run_day_cycle", "FlexTopo", "FlexTopoMasks",
     "INFEASIBLE", "Placement", "achieved_tier", "best_tier", "is_topology_hit",
     "min_tier_for", "place", "place_blind", "SchedulingDecision",
     "Transaction", "TransactionError", "EngineName", "SourcingEngine",

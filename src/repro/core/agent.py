@@ -95,6 +95,16 @@ class AgentFleet:
         """Subscribe to a TopoScheduler's transaction commits/rollbacks."""
         scheduler.add_listener(self.on_decision)
 
+    def watch_cluster(self) -> None:
+        """Subscribe to the cluster's per-node invalidation events so
+        NON-transactional mutations (autoscaler scale-downs, offline-job
+        completions — plain ``Cluster.evict`` calls that never flow through
+        a Transaction) also patch the CRDs, per the paper's §3.3
+        event-driven allocation reporting.  Safe to combine with ``watch``:
+        ``sync`` is change-deduplicated, so double notification never
+        issues a second PATCH."""
+        self.cluster.add_dirty_listener(self.notify)
+
     def on_decision(self, decision, event: str | None = None) -> int:
         """Allocation event from a committed (or rolled-back) transaction:
         sync every node the decision touched.  Returns #patches issued."""

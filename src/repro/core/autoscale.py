@@ -1,20 +1,40 @@
-"""Diurnal-traffic auto-scaler driving preemptive scheduling (paper §1, §2.3).
+"""Diurnal-traffic auto-scaling policies driving preemptive scheduling
+(paper §1, §2.3).
 
 Online chat traffic follows a diurnal pattern; offline jobs pad the valleys.
-The autoscaler converts a traffic curve into desired replica counts for the
-online workloads, scales up via the topology-aware scheduler (preempting
-offline instances as needed), and scales down by releasing instances — which
-re-opens capacity the simulator back-fills with offline work (saturation).
+`AutoscalePolicy` converts a traffic level into a desired replica count, and
+the `Autoscaler` applies those targets through the transactional scheduler:
+
+* **scale-up** is batched admission — the whole delta is planned against ONE
+  snapshot via ``plan_batch`` and the feasible transactions commit in order
+  (offline victims are evicted by the commits; the co-location event loop
+  in `repro.core.colocation` requeues them).
+* **scale-down** releases the *worst-achieved-tier* replicas first
+  (cross-socket before same-socket before NUMA-local, deterministic by uid
+  within a tier), so diurnal down-ramps defragment the cluster instead of
+  freeing random well-placed instances.  The reclaimed capacity's tier
+  distribution is reported per `AutoscaleEvent`.
+* **backfill** admission goes through chunked ``plan_batch`` rounds
+  (normal cycle only) instead of a one-at-a-time ``schedule()`` loop — the
+  valley refills through the persistent batch session and the loop stops
+  the first round nothing places, so it cannot spin when a single
+  ``schedule`` flip-flops between placeable and not.
+
+`Autoscaler.step`/`run_day` remain the episodic hour-loop interface; the
+event-driven continuous-time day cycle lives in `repro.core.colocation`,
+which consumes the same policies as event sources and drives this module's
+scale executor from traffic ticks.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-import random
+import time
 
 from .cluster import Cluster
+from .placement import achieved_tier
 from .scheduler import TopoScheduler
-from .workload import WorkloadSpec
+from .workload import Instance, WorkloadSpec
 
 
 def diurnal_traffic(hour: float, peak: float = 1.0, trough: float = 0.3) -> float:
@@ -43,59 +63,113 @@ class AutoscaleEvent:
     preemptions: int
     hits: int
     failures: int
+    placements: int = 0    # normal-cycle (non-preemptive) admissions
+    #: scale-down only: achieved tier -> number of replicas released at that
+    #: tier (the reclaimed-capacity tier distribution; worst tiers first)
+    reclaimed_tiers: dict[int, int] = dataclasses.field(default_factory=dict)
 
 
 class Autoscaler:
     def __init__(self, cluster: Cluster, scheduler: TopoScheduler,
                  policies: list[AutoscalePolicy],
                  backfill: WorkloadSpec | None = None,
-                 seed: int = 0) -> None:
+                 backfill_chunk: int = 8) -> None:
         self.cluster = cluster
         self.scheduler = scheduler
         self.policies = policies
         self.backfill = backfill
-        self.rng = random.Random(seed)
+        self.backfill_chunk = backfill_chunk
         self.events: list[AutoscaleEvent] = []
+        #: amortized per-request wall time of every ``plan_batch`` issued
+        #: through this autoscaler — one entry per planned request, the
+        #: SAME metric for host and fused engines (unlike the scheduler's
+        #: ``sourcing_us_log``, which host engines append to only on
+        #: preemptive plans)
+        self.plan_us: list[float] = []
 
-    def _replicas(self, name: str) -> list[int]:
-        return [i.uid for i in self.cluster.instances.values()
-                if i.workload.name == name]
+    def _timed_plan_batch(self, workloads, allow_preempt: bool = True):
+        t0 = time.perf_counter()
+        txns = self.scheduler.plan_batch(workloads, allow_preempt=allow_preempt)
+        per_req = (time.perf_counter() - t0) * 1e6 / max(1, len(txns))
+        self.plan_us.extend([per_req] * len(txns))
+        return txns
 
+    def _replicas(self, name: str) -> list[Instance]:
+        return sorted((i for i in self.cluster.instances.values()
+                       if i.workload.name == name), key=lambda i: i.uid)
+
+    # ---- the scale executor (shared with the co-location event loop) ---------------
+    def scale_to(self, policy: AutoscalePolicy, want: int,
+                 hour: float = 0.0) -> AutoscaleEvent:
+        """Bring one policy's replica count to ``want`` and record the event."""
+        current = self._replicas(policy.workload.name)
+        delta = want - len(current)
+        preemptions = hits = failures = placements = 0
+        reclaimed: dict[int, int] = {}
+        if delta > 0:
+            # batched admission: plan the whole scale-up against one
+            # snapshot, then commit the feasible transactions in order
+            for txn in self._timed_plan_batch([policy.workload] * delta):
+                dec = txn.commit()
+                if dec.rejected:
+                    failures += 1
+                elif dec.preempted:
+                    preemptions += 1
+                    hits += int(dec.hit)
+                else:
+                    placements += 1
+            action = "scale_up"
+        elif delta < 0:
+            # release the worst-achieved-tier replicas first (cross-socket,
+            # then same-socket, then NUMA-local; uid-deterministic within a
+            # tier) so down-ramps reclaim badly-distributed capacity
+            spec = self.cluster.spec
+            victims = sorted(
+                current,
+                key=lambda i: (-achieved_tier(spec, i.gpu_mask), i.uid))
+            for inst in victims[:-delta]:
+                tier = achieved_tier(spec, inst.gpu_mask)
+                reclaimed[tier] = reclaimed.get(tier, 0) + 1
+                self.cluster.evict(inst.uid)
+            action = "scale_down"
+        else:
+            action = "noop"
+        ev = AutoscaleEvent(hour, policy.workload.name, action, delta,
+                            preemptions, hits, failures, placements,
+                            reclaimed)
+        self.events.append(ev)
+        return ev
+
+    def backfill_valleys(self) -> tuple[int, int]:
+        """Chunked ``plan_batch`` admission of the backfill workload.
+
+        Plans ``backfill_chunk`` instances per round against one snapshot
+        (normal cycle only — offline padding never preempts) and commits
+        the placed ones; stops the first round in which nothing places, so
+        a flip-flopping ``schedule`` can never spin the loop.  Returns
+        ``(admitted, rejected_in_final_round)``.
+        """
+        if self.backfill is None:
+            return 0, 0
+        admitted = 0
+        while True:
+            txns = self._timed_plan_batch(
+                [self.backfill] * self.backfill_chunk, allow_preempt=False)
+            placed = [t for t in txns if t.decision.placed]
+            for t in placed:
+                t.commit()
+            admitted += len(placed)
+            if len(placed) < len(txns):
+                return admitted, len(txns) - len(placed)
+
+    # ---- the episodic hour-loop interface -------------------------------------------
     def step(self, hour: float) -> list[AutoscaleEvent]:
         load = diurnal_traffic(hour)
-        out = []
-        for pol in self.policies:
-            current = self._replicas(pol.workload.name)
-            want = pol.desired(load)
-            delta = want - len(current)
-            preemptions = hits = failures = 0
-            if delta > 0:
-                # batched admission: plan the whole scale-up against one
-                # snapshot, then commit the feasible transactions in order
-                for txn in self.scheduler.plan_batch(
-                        [pol.workload] * delta):
-                    dec = txn.commit()
-                    if dec.rejected:
-                        failures += 1
-                    elif dec.preempted:
-                        preemptions += 1
-                        hits += int(dec.hit)
-                action = "scale_up"
-            elif delta < 0:
-                for uid in self.rng.sample(current, -delta):
-                    self.cluster.evict(uid)
-                action = "scale_down"
-            else:
-                action = "noop"
-            ev = AutoscaleEvent(hour, pol.workload.name, action, delta,
-                                preemptions, hits, failures)
-            self.events.append(ev)
-            out.append(ev)
+        out = [self.scale_to(pol, pol.desired(load), hour)
+               for pol in self.policies]
         # co-location: offline work continuously pads whatever is free
         # (valleys between online peaks — paper §1 saturation allocation)
-        if self.backfill is not None:
-            while self.scheduler.schedule(self.backfill):
-                pass
+        self.backfill_valleys()
         return out
 
     def run_day(self, step_hours: float = 1.0) -> list[AutoscaleEvent]:

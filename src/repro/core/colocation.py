@@ -1,0 +1,613 @@
+"""Event-driven continuous-time co-location engine (paper §1/§2.3, Fig. 2).
+
+The paper's headline scenario — long-running online chat services with
+diurnal traffic, offline batch jobs padding the valleys between peaks, and
+preemption waves at the ramps — is a *process over time*, not an episodic
+experiment.  This module runs it end to end: a priority event queue of
+traffic ticks, offline-job submissions/completions, and victim requeues is
+driven entirely through the transactional plan/commit API (persistent batch
+sessions, optional construction-time jit warm-up), and every committed
+decision streams through the scheduler's listener chain into a per-hour
+`ColocationReport`.
+
+Event kinds (stable ordering at equal timestamps):
+
+* ``tick``     — an `AutoscalePolicy` evaluation: the diurnal traffic level
+  becomes desired replica counts and the delta is applied through the
+  `Autoscaler` scale executor (batched ``plan_batch`` scale-ups that preempt
+  offline victims at the ramps; worst-achieved-tier scale-downs that
+  defragment on the way down).  Policies are *event sources*: they produce
+  no state of their own between ticks.
+* ``complete`` — a running offline job finished; its instance is released
+  and the reopened capacity is immediately backfilled from the pending
+  queue.
+* ``requeue``  — a preempted offline victim re-enters the pending queue
+  after a short delay and is replanned via chunked ``plan_batch`` admission
+  when capacity allows.  The job keeps its workload identity and its
+  remaining work; every instance uid it runs under is recorded and uids are
+  never reused (`Cluster` uids are monotonic).
+* ``submit``   — a new offline job arrives (seeded Poisson process, drawn
+  entirely at construction so the arrival stream is identical across
+  engines) and enters the pending queue.
+* ``scale``    — an explicit one-shot scale-up request; the Fig. 8/9 views
+  (`repro.core.simulator.run_timeline` / ``run_allocation_snapshot``) are
+  day-cycle runs consisting only of these.
+
+**Scheduled performance** follows the paper's Fig. 2 accounting: each live
+instance contributes ``gpus x TIER_PERF[achieved tier]`` per hour
+(`repro.serving.scheduled_factor` is the same conversion applied to the
+per-decision stream), and the headline metric is the integral of the ONLINE
+classes' factor-weighted GPU-hours over the day — the quantity the paper
+reports a 55% improvement on for topology-aware preemption.  Offline jobs
+are credited separately as completed GPU-hours (goodput).
+
+``compare_day_cycle`` runs the A/B: the same seeded day (identical arrival
+stream, identical policies) under a topology-aware engine and a
+topology-unaware baseline, reporting the scheduled-performance uplift.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+import random
+import statistics
+import time
+from collections import deque
+
+from .agent import AgentFleet
+from .autoscale import AutoscalePolicy, Autoscaler, diurnal_traffic
+from .cluster import Cluster
+from .engines import EngineName
+from .placement import achieved_tier
+from .scheduler import TopoScheduler
+from .topology import RTX4090_SERVER, ServerSpec
+from .workload import WorkloadSpec, table3_workloads
+
+# event-kind priorities: stable processing order at equal timestamps
+_TICK, _COMPLETE, _REQUEUE, _SUBMIT, _SCALE = range(5)
+
+
+@dataclasses.dataclass(frozen=True)
+class ColocationConfig:
+    """One day-cycle scenario (frozen so A/B runs share it via ``replace``)."""
+
+    num_nodes: int = 16
+    spec: ServerSpec = RTX4090_SERVER
+    seed: int = 0
+    alpha: float = 0.5
+    engine: EngineName = "imp_batched"
+    warmup: bool = False
+    horizon_hours: float = 24.0
+    tick_hours: float = 1.0
+    #: preempted victims re-enter the pending queue after this delay
+    requeue_delay_hours: float = 0.1
+    #: floor on a requeued job's remaining work (progress is checkpointed)
+    min_requeue_hours: float = 0.05
+    #: pending-queue admission rounds plan this many requests per dispatch
+    backfill_chunk: int = 8
+    #: offline arrivals per hour; None scales with the cluster (2.5 / node,
+    #: deliberate oversupply so the allocation stays saturated through the
+    #: night and the morning online ramp has to preempt — the paper's §2.3
+    #: co-location regime; the surplus queues as backlog)
+    offline_rate_per_hour: float | None = None
+    mean_job_hours: float = 2.0
+    #: day-0 burst that saturates the initial allocation; None -> 4 / node
+    initial_offline_jobs: int | None = None
+    #: False drops preempted victims instead of requeueing them (the legacy
+    #: episodic semantics, kept for the Fig. 8/9 views)
+    requeue: bool = True
+
+
+@dataclasses.dataclass
+class OfflineJob:
+    """One offline batch job across its whole lifecycle (pending -> running
+    -> preempted/requeued -> ... -> completed).  ``uids`` records every
+    instance uid the job has run under; a replanned job always binds a NEW
+    uid (cluster uids are monotonic), preserving workload identity without
+    ever resurrecting an evicted instance."""
+
+    jid: int
+    workload: WorkloadSpec
+    duration_hours: float
+    submitted_at: float
+    remaining_hours: float
+    requeues: int = 0
+    uids: tuple[int, ...] = ()
+    uid: int | None = None          # live instance uid while running
+    started_at: float = 0.0
+    completed_at: float | None = None
+    #: Fig. 2 progress rate of the CURRENT placement: a degraded tier runs
+    #: the job slower, so it occupies its GPUs for proportionally longer
+    rate: float = 1.0
+
+
+@dataclasses.dataclass
+class HourRow:
+    """One reporting interval of a day-cycle run."""
+
+    hour: float                     # interval start (simulation hours)
+    load: float                     # diurnal traffic level at the last tick
+    counts: dict[str, int]          # live instances by workload at interval end
+    scheduled_perf: float           # ONLINE factor-weighted GPU-hours served
+    preemptor_perf: float           # ...restricted to preemption-placed instances
+    served: dict[str, float]        # per-class factor-weighted GPU-hours
+    offline_goodput: float          # completed offline job GPU-hours
+    placements: int                 # committed normal-cycle admissions
+    preemptions: int
+    hits: int                       # topology-affinity hits among preemptions
+    failures: int                   # rejected online scale-up requests
+    requeued: int                   # victims entering the requeue lifecycle
+    requeue_replanned: int          # requeued jobs successfully replanned
+    completed_jobs: int
+    pending: int                    # offline queue depth at interval end
+    crd_patches: int                # FlexTopo agent PATCHes (AgentFleet.watch)
+    reclaimed_tiers: dict[int, int]  # scale-down tier distribution
+    decision_factor_mean: float     # mean Fig. 2 factor of committed decisions
+    #: P50 per-request plan wall time this interval, measured around every
+    #: plan/plan_batch call the sim issues — the same metric for host and
+    #: fused engines
+    plan_p50_us: float
+
+    def key_metrics(self) -> dict:
+        """Deterministic fields only (wall-clock latency excluded)."""
+        out = dataclasses.asdict(self)
+        out.pop("plan_p50_us")
+        return out
+
+
+@dataclasses.dataclass
+class ColocationReport:
+    """Per-hour rows + day totals of one co-location day cycle."""
+
+    engine: str
+    seed: int
+    num_nodes: int
+    horizon_hours: float
+    hours: list[HourRow] = dataclasses.field(default_factory=list)
+
+    @property
+    def scheduled_perf(self) -> float:
+        return sum(r.scheduled_perf for r in self.hours)
+
+    @property
+    def preemptor_perf(self) -> float:
+        """Scheduled performance of preemption-placed instances only — the
+        slice of the integral the paper's +55% claim is about."""
+        return sum(r.preemptor_perf for r in self.hours)
+
+    @property
+    def offline_goodput(self) -> float:
+        return sum(r.offline_goodput for r in self.hours)
+
+    @property
+    def preemptions(self) -> int:
+        return sum(r.preemptions for r in self.hours)
+
+    @property
+    def hits(self) -> int:
+        return sum(r.hits for r in self.hours)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.preemptions if self.preemptions else 0.0
+
+    @property
+    def placements(self) -> int:
+        return sum(r.placements for r in self.hours)
+
+    @property
+    def failures(self) -> int:
+        return sum(r.failures for r in self.hours)
+
+    @property
+    def requeued(self) -> int:
+        return sum(r.requeued for r in self.hours)
+
+    @property
+    def requeue_replanned(self) -> int:
+        return sum(r.requeue_replanned for r in self.hours)
+
+    @property
+    def requeue_success_rate(self) -> float:
+        return self.requeue_replanned / self.requeued if self.requeued else 0.0
+
+    @property
+    def plan_p50_us(self) -> float:
+        vals = [r.plan_p50_us for r in self.hours if r.plan_p50_us > 0]
+        return statistics.median(vals) if vals else 0.0
+
+    def key_metrics(self) -> dict:
+        """Everything deterministic under (seed, engine) — the parity and
+        determinism tests compare these dicts whole."""
+        return {
+            "engine": self.engine,
+            "seed": self.seed,
+            "num_nodes": self.num_nodes,
+            "scheduled_perf": self.scheduled_perf,
+            "offline_goodput": self.offline_goodput,
+            "preemptions": self.preemptions,
+            "hits": self.hits,
+            "placements": self.placements,
+            "failures": self.failures,
+            "requeued": self.requeued,
+            "requeue_replanned": self.requeue_replanned,
+            "completed_jobs": sum(r.completed_jobs for r in self.hours),
+            "hours": [r.key_metrics() for r in self.hours],
+        }
+
+
+def default_policies(cfg: ColocationConfig) -> list[AutoscalePolicy]:
+    """Table 3 online mix scaled to the cluster: A and B ride the diurnal
+    curve between ~25% of peak and the Table 3 per-100-node peak counts
+    (the wide span is what produces the paper's preemption waves at the
+    morning ramp and the defragmenting scale-downs at night)."""
+    wl = {w.name: w for w in table3_workloads()}
+    scale = cfg.num_nodes / 100.0
+    a_max = max(1, round(20 * scale))
+    b_max = max(2, round(40 * scale))
+    return [
+        AutoscalePolicy(wl["A"], max(1, round(a_max * 0.25)), a_max),
+        AutoscalePolicy(wl["B"], max(1, round(b_max * 0.25)), b_max),
+    ]
+
+
+class ColocationSim:
+    """The event loop.  Construct, then ``run()`` once."""
+
+    def __init__(
+        self,
+        cfg: ColocationConfig,
+        policies: list[AutoscalePolicy] | None = None,
+        scale_events: list[tuple[float, WorkloadSpec]] | None = None,
+        cluster: Cluster | None = None,
+    ) -> None:
+        self.cfg = cfg
+        self.cluster = cluster if cluster is not None else Cluster(
+            cfg.spec, cfg.num_nodes)
+        self.sched = TopoScheduler(self.cluster, engine=cfg.engine,
+                                   alpha=cfg.alpha, warmup=cfg.warmup)
+        self.auto = Autoscaler(self.cluster, self.sched,
+                               policies if policies is not None else [],
+                               backfill_chunk=cfg.backfill_chunk)
+        self.fleet = AgentFleet(self.cluster)
+        self.fleet.watch(self.sched)
+        # scale-downs and job completions evict WITHOUT a transaction;
+        # the cluster-event subscription keeps the CRDs fresh for those
+        self.fleet.watch_cluster()
+        self.sched.add_listener(self._on_decision)
+        # Fig. 2 factors come from the serving layer (lazy import keeps the
+        # model/serving stack out of core's import graph until needed)
+        from repro.serving import (relative_scheduled_factor,
+                                   scheduled_factor)
+        self._rel_factor = relative_scheduled_factor
+        self._scheduled_factor = scheduled_factor
+
+        self.pending: deque[OfflineJob] = deque()
+        self.jobs: list[OfflineJob] = []        # every job ever created
+        self._running: dict[int, OfflineJob] = {}   # live uid -> job
+        self._preemptor_uids: set[int] = set()  # instances placed by preemption
+        self._factor_cache: dict[int, float] = {}   # uid -> Fig. 2 rate
+        self.timeline: list[dict[str, int]] = []    # Fig. 9 view rows
+        self._heap: list[tuple] = []
+        self._seq = 0
+        self._now = 0.0
+        self._row_start = 0.0
+        self._last_load = 0.0
+        self._scale_step = 0
+        self._ran = False
+        self.report = ColocationReport(engine=cfg.engine, seed=cfg.seed,
+                                       num_nodes=cfg.num_nodes,
+                                       horizon_hours=cfg.horizon_hours)
+        self._reset_acc()
+        self._patch_base = self.fleet.store.patch_count
+        self._plan_log_base = 0     # index into the autoscaler's plan_us log
+
+        if policies:
+            t = 0.0
+            while t < cfg.horizon_hours:
+                self._push(t, _TICK, None)
+                t += cfg.tick_hours
+            self._generate_offline_arrivals()
+        for t, wl in (scale_events or []):
+            self._push(t, _SCALE, wl)
+        if scale_events:
+            self.timeline.append(dict(self.cluster.count_by_workload(),
+                                      step=0))
+
+    # ---- event plumbing --------------------------------------------------------------
+    def _push(self, time: float, kind: int, payload) -> None:
+        self._seq += 1
+        heapq.heappush(self._heap, (time, kind, self._seq, payload))
+
+    def _generate_offline_arrivals(self) -> None:
+        """Draw the WHOLE offline arrival stream (times, classes, durations)
+        at construction from the seed, so every engine replays the same
+        day."""
+        cfg = self.cfg
+        wl = {w.name: w for w in table3_workloads()}
+        rng = random.Random(cfg.seed + 555)
+        jid = 0
+
+        def new_job(t: float) -> OfflineJob:
+            nonlocal jid
+            jid += 1
+            # Table 3 offline mix: C (2-GPU) to D (1-GPU) roughly 0.7/0.3
+            w = wl["C"] if rng.random() < 0.7 else wl["D"]
+            dur = min(8.0, max(0.5, rng.expovariate(1.0 / cfg.mean_job_hours)))
+            return OfflineJob(jid=jid, workload=w, duration_hours=dur,
+                              submitted_at=t, remaining_hours=dur)
+
+        initial = (cfg.initial_offline_jobs
+                   if cfg.initial_offline_jobs is not None
+                   else 4 * cfg.num_nodes)
+        for _ in range(initial):
+            self._push(0.0, _SUBMIT, new_job(0.0))
+        rate = (cfg.offline_rate_per_hour
+                if cfg.offline_rate_per_hour is not None
+                else 2.5 * cfg.num_nodes)
+        t = 0.0
+        while rate > 0:
+            t += rng.expovariate(rate)
+            if t >= cfg.horizon_hours:
+                break
+            self._push(t, _SUBMIT, new_job(t))
+
+    # ---- accounting ------------------------------------------------------------------
+    def _reset_acc(self) -> None:
+        self._acc = {
+            "placements": 0, "preemptions": 0, "hits": 0, "failures": 0,
+            "requeued": 0, "requeue_replanned": 0, "completed_jobs": 0,
+            "offline_goodput": 0.0, "preemptor_perf": 0.0,
+            "served": {}, "reclaimed": {}, "factors": [],
+        }
+
+    def _instance_factor(self, inst) -> float:
+        """Fig. 2 factor RELATIVE to the best tier this instance size can
+        physically achieve on the SKU (`serving.relative_scheduled_factor`):
+        degradation measures scheduling quality, not instance size.  Cached
+        per uid — a placement is immutable for the instance's lifetime and
+        uids are never reused, so ``_advance`` costs a dict hit per
+        instance instead of a bit-scan per event."""
+        factor = self._factor_cache.get(inst.uid)
+        if factor is None:
+            spec = self.cluster.spec
+            factor = self._rel_factor(spec,
+                                      achieved_tier(spec, inst.gpu_mask),
+                                      inst.workload.gpus_per_instance)
+            self._factor_cache[inst.uid] = factor
+        return factor
+
+    def _advance(self, to_time: float) -> None:
+        """Accumulate the factor-weighted GPU-hour integrals up to
+        ``to_time`` (cluster state is piecewise-constant between events)."""
+        dt = to_time - self._now
+        if dt > 0:
+            served = self._acc["served"]
+            for inst in self.cluster.instances.values():
+                name = inst.workload.name
+                contrib = (inst.workload.gpus_per_instance
+                           * self._instance_factor(inst) * dt)
+                served[name] = served.get(name, 0.0) + contrib
+                if inst.uid in self._preemptor_uids:
+                    self._acc["preemptor_perf"] += contrib
+        self._now = to_time
+
+    def _on_decision(self, dec, event: str) -> None:
+        """The decision-listener stream: every committed transaction lands
+        here (the `AgentFleet` is subscribed right next to us)."""
+        if event != "committed" or dec.rejected:
+            return
+        acc = self._acc
+        acc["factors"].append(self._scheduled_factor(dec))
+        if dec.preempted:
+            acc["preemptions"] += 1
+            acc["hits"] += int(dec.hit)
+            if dec.instance is not None:
+                self._preemptor_uids.add(dec.instance.uid)
+        else:
+            acc["placements"] += 1
+        for victim in dec.evicted:
+            job = self._running.pop(victim.uid, None)
+            if job is None:
+                continue        # not job-tracked (e.g. pre-saturated state)
+            ran = (self._now - job.started_at) * job.rate
+            job.remaining_hours = max(self.cfg.min_requeue_hours,
+                                      job.remaining_hours - ran)
+            job.requeues += 1
+            job.uid = None
+            acc["requeued"] += 1
+            if self.cfg.requeue:
+                self._push(self._now + self.cfg.requeue_delay_hours,
+                           _REQUEUE, job)
+
+    def _flush(self, end: float) -> None:
+        acc = self._acc
+        served = acc["served"]
+        online = sum(v for k, v in served.items()
+                     if self._kind_of(k) == "online")
+        log = self.auto.plan_us[self._plan_log_base:]
+        row = HourRow(
+            hour=self._row_start,
+            load=self._last_load,
+            counts=dict(self.cluster.count_by_workload()),
+            scheduled_perf=online,
+            preemptor_perf=acc["preemptor_perf"],
+            served=dict(served),
+            offline_goodput=acc["offline_goodput"],
+            placements=acc["placements"],
+            preemptions=acc["preemptions"],
+            hits=acc["hits"],
+            failures=acc["failures"],
+            requeued=acc["requeued"],
+            requeue_replanned=acc["requeue_replanned"],
+            completed_jobs=acc["completed_jobs"],
+            pending=len(self.pending),
+            crd_patches=self.fleet.store.patch_count - self._patch_base,
+            reclaimed_tiers=dict(acc["reclaimed"]),
+            decision_factor_mean=(statistics.fmean(acc["factors"])
+                                  if acc["factors"] else 0.0),
+            plan_p50_us=(statistics.median(log) if log else 0.0),
+        )
+        self.report.hours.append(row)
+        self._row_start = end
+        self._patch_base = self.fleet.store.patch_count
+        self._plan_log_base = len(self.auto.plan_us)
+        self._reset_acc()
+
+    def _kind_of(self, name: str) -> str:
+        for w in self.auto.policies:
+            if w.workload.name == name:
+                return w.workload.kind
+        for j in self.jobs:
+            if j.workload.name == name:
+                return j.workload.kind
+        wl = {w.name: w for w in table3_workloads()}
+        return wl[name].kind if name in wl else "online"
+
+    # ---- handlers --------------------------------------------------------------------
+    def _handle_tick(self, t: float) -> None:
+        if t > self._row_start:
+            self._flush(t)
+        self._last_load = diurnal_traffic(t % 24.0)
+        for pol in self.auto.policies:
+            ev = self.auto.scale_to(pol, pol.desired(self._last_load), t)
+            self._acc["failures"] += ev.failures
+            for tier, n in ev.reclaimed_tiers.items():
+                self._acc["reclaimed"][tier] = (
+                    self._acc["reclaimed"].get(tier, 0) + n)
+        self._drain()
+
+    def _handle_submit(self, job: OfflineJob) -> None:
+        self.jobs.append(job)
+        self.pending.append(job)
+        self._drain()
+
+    def _handle_requeue(self, job: OfflineJob) -> None:
+        self.pending.append(job)
+        self._drain()
+
+    def _handle_complete(self, uid: int) -> None:
+        job = self._running.get(uid)
+        if job is None or job.uid != uid:
+            return               # stale event: the job was preempted earlier
+        del self._running[uid]
+        self.cluster.evict(uid)
+        job.uid = None
+        job.remaining_hours = 0.0
+        job.completed_at = self._now
+        self._acc["completed_jobs"] += 1
+        self._acc["offline_goodput"] += (
+            job.duration_hours * job.workload.gpus_per_instance)
+        self._drain()
+
+    def _handle_scale(self, workload: WorkloadSpec) -> None:
+        """One explicit Algorithm 1 attempt (the Fig. 8/9 view events)."""
+        t0 = time.perf_counter()
+        txn = self.sched.plan(workload)
+        self.auto.plan_us.append((time.perf_counter() - t0) * 1e6)
+        dec = txn.commit()
+        if dec.rejected:
+            self._acc["failures"] += 1
+        self._scale_step += 1
+        self.timeline.append(dict(self.cluster.count_by_workload(),
+                                  step=self._scale_step))
+
+    def _drain(self) -> None:
+        """Backfill the pending offline queue through chunked ``plan_batch``
+        admission (normal cycle only).  One FIFO pass per trigger; stops as
+        soon as an entire chunk fails to place, so a full cluster costs one
+        dispatch."""
+        if not self.pending:
+            return
+        queue, self.pending = self.pending, deque()
+        while queue:
+            chunk = [queue.popleft()
+                     for _ in range(min(self.cfg.backfill_chunk, len(queue)))]
+            txns = self.auto._timed_plan_batch([j.workload for j in chunk],
+                                               allow_preempt=False)
+            any_placed = False
+            for job, txn in zip(chunk, txns):
+                if txn.decision.placed:
+                    dec = txn.commit()
+                    self._start_job(job, dec)
+                    any_placed = True
+                else:
+                    self.pending.append(job)
+            if not any_placed:
+                self.pending.extend(queue)
+                return
+
+    def _start_job(self, job: OfflineJob, dec) -> None:
+        uid = dec.instance.uid
+        assert uid not in job.uids, "instance uid resurrected"
+        job.uid = uid
+        job.uids += (uid,)
+        job.started_at = self._now
+        # the placement tier sets the progress rate: a degraded offline
+        # instance runs slower and holds its GPUs proportionally longer
+        job.rate = self._instance_factor(dec.instance)
+        self._running[uid] = job
+        if job.requeues:
+            self._acc["requeue_replanned"] += 1
+        self._push(self._now + job.remaining_hours / job.rate, _COMPLETE, uid)
+
+    # ---- the loop --------------------------------------------------------------------
+    def run(self) -> ColocationReport:
+        if self._ran:
+            raise RuntimeError("ColocationSim.run() is one-shot")
+        self._ran = True
+        horizon = self.cfg.horizon_hours
+        handlers = {
+            _TICK: lambda t, p: self._handle_tick(t),
+            _COMPLETE: lambda t, p: self._handle_complete(p),
+            _REQUEUE: lambda t, p: self._handle_requeue(p),
+            _SUBMIT: lambda t, p: self._handle_submit(p),
+            _SCALE: lambda t, p: self._handle_scale(p),
+        }
+        while self._heap and self._heap[0][0] <= horizon:
+            t, kind, _, payload = heapq.heappop(self._heap)
+            self._advance(t)
+            handlers[kind](t, payload)
+        self._advance(horizon)
+        self._flush(horizon)
+        # the run is one-shot: detach from the scheduler so a caller that
+        # keeps using it does not stream decisions into a finished report
+        self.sched.remove_listener(self._on_decision)
+        return self.report
+
+
+def run_day_cycle(cfg: ColocationConfig,
+                  policies: list[AutoscalePolicy] | None = None,
+                  ) -> ColocationReport:
+    """One full simulated day on the Table 3 mix under ``cfg.engine``."""
+    sim = ColocationSim(cfg, policies=policies or default_policies(cfg))
+    return sim.run()
+
+
+def compare_day_cycle(
+    cfg: ColocationConfig,
+    engines: tuple[str, str] = ("imp_batched", "godel"),
+) -> dict:
+    """The paper's A/B: the SAME seeded day under a topology-aware engine
+    vs a topology-unaware baseline.  Returns the per-engine reports and the
+    scheduled-performance uplift ``(aware - baseline) / baseline`` — the
+    quantity the paper reports as +55%."""
+    aware_name, baseline_name = engines
+    reports = {
+        name: run_day_cycle(dataclasses.replace(cfg, engine=name))
+        for name in engines
+    }
+
+    def _uplift(metric: str) -> float:
+        base = getattr(reports[baseline_name], metric)
+        return ((getattr(reports[aware_name], metric) - base) / base
+                if base else 0.0)
+
+    return {
+        "engines": engines,
+        "reports": reports,
+        "uplift": _uplift("scheduled_perf"),
+        "preemptor_uplift": _uplift("preemptor_perf"),
+        "goodput_uplift": _uplift("offline_goodput"),
+    }

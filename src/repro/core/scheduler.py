@@ -168,6 +168,15 @@ class TopoScheduler:
         """Subscribe to committed/rolled-back decisions (e.g. the agent fleet)."""
         self.listeners.append(fn)
 
+    def remove_listener(self, fn: Callable[[SchedulingDecision, str], None]) -> None:
+        """Unsubscribe a decision listener (missing listeners are a no-op) —
+        lets transient consumers (a finished co-location run) detach without
+        keeping the scheduler alive through the callback."""
+        try:
+            self.listeners.remove(fn)
+        except ValueError:
+            pass
+
     def _notify(self, decision: SchedulingDecision, event: str) -> None:
         for fn in self.listeners:
             fn(decision, event)

@@ -40,11 +40,17 @@ class HitRateReport:
     preemptions: int = 0
     hits: int = 0
     failures: int = 0          # no feasible candidate found
+    placements: int = 0        # normal-cycle (non-preemptive) outcomes
     sourcing_us: list[float] = dataclasses.field(default_factory=list)
 
     @property
     def hit_rate(self) -> float:
         return self.hits / self.preemptions if self.preemptions else 0.0
+
+    @property
+    def decisions(self) -> int:
+        """Every evaluated outcome: placed + preempted + rejected."""
+        return self.placements + self.preemptions + self.failures
 
     def percentile(self, q: float) -> float:
         return float(np.percentile(self.sourcing_us, q)) if self.sourcing_us else 0.0
@@ -220,8 +226,11 @@ def run_hit_rate_experiment(
                 report.sourcing_us.append(dec.sourcing_us)
             elif dec.rejected:
                 report.failures += 1
-            # normal-cycle placements are not preemptions; Table 4 counts
-            # preemptions only
+            else:
+                # Table 4's hit rate is over preemptions only, but placed
+                # outcomes are still counted so the independent and
+                # committed protocols report the same decision totals
+                report.placements += 1
     return report
 
 
@@ -247,7 +256,10 @@ def run_latency_experiment(
                 report.hits += int(dec.hit)
                 report.sourcing_us.append(dec.sourcing_us)
             elif dec.rejected:
+                report.failures += 1
                 break
+            else:
+                report.placements += 1
         cycle += 1
         if cycle > samples:  # safety: cannot source enough preemptions
             break
@@ -289,7 +301,10 @@ def run_plan_latency_experiment(
                 report.hits += int(dec.hit)
                 report.sourcing_us.append(plan_us)
             elif dec.rejected:
+                report.failures += 1
                 break
+            else:
+                report.placements += 1
         cycle += 1
         if cycle > samples:  # safety: cannot source enough preemptions
             break
@@ -331,8 +346,11 @@ def run_plan_normal_latency(
         txn = sched.plan(wl)
         plan_us = (time.perf_counter() - t0) * 1e6
         if txn.decision.placed:
+            report.placements += 1
             report.hits += int(txn.decision.hit)
             report.sourcing_us.append(plan_us)
+        else:
+            report.failures += 1
     return report
 
 
@@ -367,7 +385,28 @@ def run_plan_batch_latency(
                 report.hits += int(t.decision.hit)
             elif t.decision.rejected:
                 report.failures += 1
+            else:
+                # placed outcomes were silently dropped here before:
+                # count them so batch totals match the per-plan protocols
+                report.placements += 1
     return report
+
+
+def _view_sim(cfg: SimConfig, engine: EngineName,
+              scale_events: list[tuple[float, WorkloadSpec]]):
+    """A co-location event loop seeded ONLY with explicit scale events over
+    the saturated Table 3 state: the legacy episodic protocol (victims are
+    dropped, not requeued) expressed as a day-cycle run — the Fig. 8/9
+    experiments are views of this."""
+    from .colocation import ColocationConfig, ColocationSim
+
+    horizon = max((t for t, _ in scale_events), default=0.0) + 1.0
+    ccfg = ColocationConfig(
+        num_nodes=cfg.num_nodes, spec=cfg.spec, seed=cfg.seed,
+        alpha=cfg.alpha, engine=engine, horizon_hours=horizon,
+        requeue=False, offline_rate_per_hour=0.0, initial_offline_jobs=0)
+    return ColocationSim(ccfg, scale_events=scale_events,
+                         cluster=build_saturated_cluster(cfg))
 
 
 def run_timeline(
@@ -375,19 +414,22 @@ def run_timeline(
     engine: EngineName = "imp",
     events: list[tuple[str, int]] | None = None,
 ) -> list[dict[str, int]]:
-    """Paper Fig. 9: instance counts per workload across auto-scaling events."""
+    """Paper Fig. 9: instance counts per workload across auto-scaling events.
+
+    Runs on the `repro.core.colocation` event loop: each scale-up is one
+    ``scale`` event, and the returned timeline is the sim's Fig. 9 view.
+    """
     events = events or [("B", 10), ("A", 5)]
-    cluster = build_saturated_cluster(cfg)
-    sched = TopoScheduler(cluster, engine=engine, alpha=cfg.alpha)
     workloads = {w.name: w for w in table3_workloads()}
-    timeline = [dict(cluster.count_by_workload(), step=0)]
+    scale_events: list[tuple[float, WorkloadSpec]] = []
     step = 0
     for name, count in events:
         for _ in range(count):
             step += 1
-            sched.schedule_or_preempt(workloads[name])
-            timeline.append(dict(cluster.count_by_workload(), step=step))
-    return timeline
+            scale_events.append((float(step), workloads[name]))
+    sim = _view_sim(cfg, engine, scale_events)
+    sim.run()
+    return sim.timeline
 
 
 def run_allocation_snapshot(
@@ -395,23 +437,23 @@ def run_allocation_snapshot(
     engine: EngineName,
     churn: int = 30,
 ) -> dict:
-    """Paper Fig. 8: cross-socket mis-allocations before/after churn."""
-    cluster = build_saturated_cluster(cfg)
-    before = cluster.cross_socket_instances()
-    sched = TopoScheduler(cluster, engine=engine, alpha=cfg.alpha)
+    """Paper Fig. 8: cross-socket mis-allocations before/after churn.
+
+    The churn is a seeded stream of ``scale`` events on the co-location
+    event loop; before/after snapshots bracket the run.
+    """
     workloads = {w.name: w for w in table3_workloads()}
     rng = random.Random(cfg.seed + 777)
-    preempted = 0
-    for _ in range(churn):
-        wl = workloads[rng.choice(("B", "C"))]
-        if sched.schedule_or_preempt(wl).preempted:
-            preempted += 1
-    after = cluster.cross_socket_instances()
+    scale_events = [(float(i + 1), workloads[rng.choice(("B", "C"))])
+                    for i in range(churn)]
+    sim = _view_sim(cfg, engine, scale_events)
+    before = sim.cluster.cross_socket_instances()
+    report = sim.run()
     return {
         "engine": engine,
         "cross_socket_before": before,
-        "cross_socket_after": after,
-        "instances": len(cluster.instances),
-        "preemptions": preempted,
-        "snapshot": cluster.allocation_snapshot(),
+        "cross_socket_after": sim.cluster.cross_socket_instances(),
+        "instances": len(sim.cluster.instances),
+        "preemptions": report.preemptions,
+        "snapshot": sim.cluster.allocation_snapshot(),
     }

@@ -1,5 +1,5 @@
 from .engine import (TIER_PERF, BatchQueue, Request, ServeEngine,
-                     scheduled_factor)
+                     relative_scheduled_factor, scheduled_factor)
 
 __all__ = ["TIER_PERF", "BatchQueue", "Request", "ServeEngine",
-           "scheduled_factor"]
+           "relative_scheduled_factor", "scheduled_factor"]

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.shapes import cache_capacity
+from repro.core.placement import min_tier_for
 from repro.models.api import ModelApi
 
 # Paper Fig. 2: relative communication cost per placement tier converted to a
@@ -33,6 +34,20 @@ def scheduled_factor(decision) -> float:
     if decision.placement is None:
         return 0.0
     return TIER_PERF[decision.placement.tier]
+
+
+def relative_scheduled_factor(spec, tier: int, need_gpus: int) -> float:
+    """Fig. 2 factor normalized by the best tier ``need_gpus`` can
+    physically achieve on the SKU.
+
+    A full-node instance necessarily spans sockets and serves at 1.0 when
+    it does, while a small instance misplaced across sockets is charged the
+    full cross-socket/NUMA-local cost ratio — so degradation measures
+    scheduling quality, not instance size.  This is the per-instance rate
+    the co-location day cycle (`repro.core.colocation`) integrates into its
+    scheduled-performance metric.
+    """
+    return TIER_PERF.get(tier, 0.0) / TIER_PERF[min_tier_for(spec, need_gpus)]
 
 
 @dataclasses.dataclass

@@ -128,7 +128,7 @@ def test_autoscaler_diurnal_colocation():
     auto = Autoscaler(cluster, sched,
                       [AutoscalePolicy(online, min_replicas=2,
                                        max_replicas=12)],
-                      backfill=offline, seed=0)
+                      backfill=offline)
     auto.step(hour=2.0)     # valley
     valley = cluster.count_by_workload()
     auto.step(hour=14.0)    # peak -> scale up, preempting D
