@@ -1,0 +1,98 @@
+"""Two-level elastic co-location A/B (request-level backfill ladder).
+
+Runs the SAME seeded Table 3 day twice through the event-driven co-location
+engine — the backfill ladder at instance granularity only vs the two-level
+request+instance ladder (`repro.serving.elastic`) — and writes
+``BENCH_elastic.json`` at the repo root:
+
+* ``goodput_uplift``     — offline-goodput uplift of the two-level ladder
+  (valley capacity smaller than one instance stops being wasted);
+* ``slo_attainment``     — per-mode online SLO attainment under the SAME
+  sliding-window monitor (the admission guard must keep the two-level run
+  no worse than the instance-only baseline);
+* ``preemption_delta``   — two-level minus instance-only preemptions (the
+  reserve guard + ramp-time instance demotion must make this negative);
+* per-mode day totals (elastic admissions/ejections/demotions/completions,
+  requeue counts, per-class goodput-vs-SLO rows).
+
+``benchmarks.check_elastic_regression`` gates CI on this file.
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_elastic``
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core.colocation import ColocationConfig, compare_two_level
+from repro.serving.elastic import ElasticConfig
+
+from .common import FULL, emit
+
+BENCH_JSON = Path(__file__).parent.parent / "BENCH_elastic.json"
+
+MODES = ("instance_only", "two_level")
+
+ENGINE = "imp_batched"
+
+
+def day_config(full: bool = FULL, num_nodes: int | None = None,
+               horizon_hours: float = 24.0, seed: int = 0) -> ColocationConfig:
+    return ColocationConfig(
+        num_nodes=num_nodes if num_nodes is not None else (41 if full else 24),
+        seed=seed, engine=ENGINE, horizon_hours=horizon_hours, warmup=True,
+        elastic_cfg=ElasticConfig())
+
+
+def report_payload(rep) -> dict:
+    return {
+        "scheduled_perf": rep.scheduled_perf,
+        "offline_goodput": rep.offline_goodput,
+        "elastic_goodput": rep.elastic_goodput,
+        "elastic_admitted": rep.elastic_admitted,
+        "elastic_ejected": rep.elastic_ejected,
+        "elastic_completed": rep.elastic_completed,
+        "elastic_demoted": rep.elastic_demoted,
+        "preemptions": rep.preemptions,
+        "requeued": rep.requeued,
+        "requeue_replanned": rep.requeue_replanned,
+        "placements": rep.placements,
+        "failures": rep.failures,
+        "slo_attainment": rep.slo_attainment,
+        "slo_violations": rep.slo_violations,
+        "slo_by_class": rep.slo_by_class(),
+    }
+
+
+def run(full: bool = FULL, write: bool = True) -> dict:
+    cfg = day_config(full)
+    ab = compare_two_level(cfg)
+    payload = {
+        "num_nodes": cfg.num_nodes,
+        "seed": cfg.seed,
+        "horizon_hours": cfg.horizon_hours,
+        "engine": cfg.engine,
+        "goodput_uplift": ab["goodput_uplift"],
+        "preemption_delta": ab["preemption_delta"],
+        "modes": {name: report_payload(rep)
+                  for name, rep in ab["reports"].items()},
+    }
+    if write:
+        BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
+    io, tl = (payload["modes"][m] for m in MODES)
+    emit("elastic_uplift", 0.0,
+         f"offline_goodput +{payload['goodput_uplift'] * 100:.1f}% "
+         f"preemptions {io['preemptions']}->{tl['preemptions']}")
+    emit("elastic_two_level", 0.0,
+         f"goodput={tl['offline_goodput']:.0f} "
+         f"(elastic {tl['elastic_goodput']:.0f}) "
+         f"adm={tl['elastic_admitted']} demote={tl['elastic_demoted']} "
+         f"slo={tl['slo_attainment']:.3f}")
+    emit("elastic_instance_only", 0.0,
+         f"goodput={io['offline_goodput']:.0f} "
+         f"requeued={io['requeued']} slo={io['slo_attainment']:.3f}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

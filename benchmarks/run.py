@@ -9,6 +9,7 @@ paper-scale protocol (100 nodes, 100x50 preemptions).
   fig9_*    — preemption timeline (paper Fig 9)
   fig8_*    — allocation snapshots (paper Fig 8)
   colocation_* — day-cycle co-location A/B (paper §1/§2.3, Fig 2 headline)
+  elastic_*  — two-level request+instance backfill ladder A/B
   roofline_* — §Roofline terms per (arch x shape) from the dry-run
 """
 from __future__ import annotations
@@ -18,14 +19,14 @@ import time
 
 def main() -> None:
     from . import (bench_allocation_snapshot, bench_colocation,
-                   bench_hit_rate, bench_instance_timeline, bench_roofline,
-                   bench_scheduler_hillclimb, bench_sourcing_latency,
-                   bench_workload_overhead)
+                   bench_elastic, bench_hit_rate, bench_instance_timeline,
+                   bench_roofline, bench_scheduler_hillclimb,
+                   bench_sourcing_latency, bench_workload_overhead)
 
     print("name,us_per_call,derived")
     for mod in (bench_hit_rate, bench_sourcing_latency,
                 bench_workload_overhead, bench_instance_timeline,
-                bench_allocation_snapshot, bench_colocation,
+                bench_allocation_snapshot, bench_colocation, bench_elastic,
                 bench_scheduler_hillclimb, bench_roofline):
         t0 = time.time()
         mod.run()

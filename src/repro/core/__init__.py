@@ -2,11 +2,14 @@
 from .cluster import (MAX_DENSE_VICTIMS, Cluster, ClusterArrays, ClusterView,
                       DeviceClusterState, SourcingContext)
 from .colocation import (ColocationConfig, ColocationReport, ColocationSim,
-                         OfflineJob, compare_day_cycle, run_day_cycle)
+                         OfflineJob, compare_day_cycle, compare_two_level,
+                         run_day_cycle)
 from .decisions import SchedulingDecision, Transaction, TransactionError
 from .engines import (EngineName, SourcingEngine, UnknownEngineError,
                       get_engine, register_engine, registered_engines)
 from .flextopo import FlexTopo, FlexTopoMasks
+from .perfmodel import (TIER_PERF, relative_scheduled_factor,
+                        scheduled_factor)
 from .placement import (INFEASIBLE, Placement, achieved_tier, best_tier,
                         is_topology_hit, min_tier_for, place, place_blind)
 from .scheduler import TopoScheduler
@@ -19,7 +22,8 @@ __all__ = [
     "Cluster", "ClusterArrays", "ClusterView", "DeviceClusterState",
     "SourcingContext", "MAX_DENSE_VICTIMS", "ColocationConfig",
     "ColocationReport", "ColocationSim", "OfflineJob", "compare_day_cycle",
-    "run_day_cycle", "FlexTopo", "FlexTopoMasks",
+    "compare_two_level", "run_day_cycle", "FlexTopo", "FlexTopoMasks",
+    "TIER_PERF", "relative_scheduled_factor", "scheduled_factor",
     "INFEASIBLE", "Placement", "achieved_tier", "best_tier", "is_topology_hit",
     "min_tier_for", "place", "place_blind", "SchedulingDecision",
     "Transaction", "TransactionError", "EngineName", "SourcingEngine",

@@ -94,9 +94,27 @@ class Autoscaler:
         self.plan_us.extend([per_req] * len(txns))
         return txns
 
-    def _replicas(self, name: str) -> list[Instance]:
+    def replicas(self, name: str) -> list[Instance]:
+        """Live replicas of one workload class, uid-ordered."""
         return sorted((i for i in self.cluster.instances.values()
                        if i.workload.name == name), key=lambda i: i.uid)
+
+    _replicas = replicas        # compat alias
+
+    def online_reserve_gpus(self, next_load: float) -> int:
+        """GPUs the next tick's online scale-up will claim across all
+        policies.  The two-level backfill ladder (`repro.core.colocation`,
+        elastic mode) holds this many free GPUs back from whole-instance
+        offline spin-up during rising load, so the ramp's online replicas
+        land in the normal cycle instead of preempting offline instances
+        that were created one tick earlier — shrinking the Eq. 2 victim
+        set instead of growing it."""
+        total = 0
+        for pol in self.policies:
+            want = pol.desired(next_load)
+            have = len(self.replicas(pol.workload.name))
+            total += max(0, want - have) * pol.workload.gpus_per_instance
+        return total
 
     # ---- the scale executor (shared with the co-location event loop) ---------------
     def scale_to(self, policy: AutoscalePolicy, want: int,

@@ -32,6 +32,22 @@ Event kinds (stable ordering at equal timestamps):
 * ``scale``    — an explicit one-shot scale-up request; the Fig. 8/9 views
   (`repro.core.simulator.run_timeline` / ``run_allocation_snapshot``) are
   day-cycle runs consisting only of these.
+* ``ecomplete`` — an offline job hosted at REQUEST granularity inside an
+  online replica's spare continuous-batching slots (the elastic layer,
+  `repro.serving.elastic`) finished; its slot grant is released.
+
+**The two-level backfill ladder** (``ColocationConfig.elastic=True``) sits
+between the day cycle and the per-instance engines: each valley tick first
+packs pending offline work into online replicas' spare request slots
+through the `ElasticPool` admission controller (SLO-guarded, tier-aware)
+and only spins up whole offline instances for the residual — holding back
+the next tick's online GPU reserve so ramp scale-ups land in the normal
+cycle instead of preempting instances created one tick earlier.  Peak
+ramps reverse the ladder: online load reclaims request slots (ejecting
+offline requests back to the pending queue — degrade-before-kill) BEFORE
+the scale executor preempts whole instances, shrinking the Eq. 2 victim
+set.  ``compare_two_level`` A/Bs instance-only vs two-level backfill on
+the same seeded day.
 
 **Scheduled performance** follows the paper's Fig. 2 accounting: each live
 instance contributes ``gpus x TIER_PERF[achieved tier]`` per hour
@@ -59,13 +75,14 @@ from .agent import AgentFleet
 from .autoscale import AutoscalePolicy, Autoscaler, diurnal_traffic
 from .cluster import Cluster
 from .engines import EngineName
+from .perfmodel import relative_scheduled_factor, scheduled_factor
 from .placement import achieved_tier
 from .scheduler import TopoScheduler
 from .topology import RTX4090_SERVER, ServerSpec
 from .workload import WorkloadSpec, table3_workloads
 
 # event-kind priorities: stable processing order at equal timestamps
-_TICK, _COMPLETE, _REQUEUE, _SUBMIT, _SCALE = range(5)
+_TICK, _COMPLETE, _REQUEUE, _SUBMIT, _SCALE, _ECOMPLETE = range(6)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +114,15 @@ class ColocationConfig:
     #: False drops preempted victims instead of requeueing them (the legacy
     #: episodic semantics, kept for the Fig. 8/9 views)
     requeue: bool = True
+    #: True enables the two-level backfill ladder: pending offline work is
+    #: packed into online replicas' spare request slots (the elastic layer)
+    #: before whole offline instances are spun up for the residual
+    elastic: bool = False
+    #: `repro.serving.elastic.ElasticConfig`; setting it WITHOUT
+    #: ``elastic=True`` runs the instance-only ladder under the same SLO
+    #: monitor — the A/B baseline that reports attainment without admitting
+    #: request-level work.  None with ``elastic=True`` uses the defaults.
+    elastic_cfg: object | None = None
 
 
 @dataclasses.dataclass
@@ -120,6 +146,13 @@ class OfflineJob:
     #: Fig. 2 progress rate of the CURRENT placement: a degraded tier runs
     #: the job slower, so it occupies its GPUs for proportionally longer
     rate: float = 1.0
+    #: times this job was hosted at request granularity (elastic layer)
+    elastic_hosts: int = 0
+    #: times the job was ejected from request slots (degrade-before-kill)
+    ejections: int = 0
+    #: set when a preemption requeues the job; cleared (and counted as a
+    #: successful replan) by its next start, instance-granular or elastic
+    awaiting_replan: bool = False
 
 
 @dataclasses.dataclass
@@ -148,6 +181,17 @@ class HourRow:
     #: plan/plan_batch call the sim issues — the same metric for host and
     #: fused engines
     plan_p50_us: float
+    # ---- request-level elastic co-location (two-level ladder) ----
+    elastic_admitted: int = 0       # offline jobs packed into request slots
+    elastic_ejected: int = 0        # request-level ejections (degrade path)
+    elastic_completed: int = 0      # jobs finished inside request slots
+    #: whole offline instances demoted into request slots ahead of a ramp
+    #: scale-up (each one is an instance preemption that did NOT happen)
+    elastic_demoted: int = 0
+    elastic_goodput: float = 0.0    # ...their completed GPU-hours
+    #: per-class SLO window counts {ok, total, violations, attainment}
+    #: (goodput-vs-SLO-violation rows; empty without an SLO monitor)
+    slo: dict = dataclasses.field(default_factory=dict)
 
     def key_metrics(self) -> dict:
         """Deterministic fields only (wall-clock latency excluded)."""
@@ -213,6 +257,53 @@ class ColocationReport:
         return self.requeue_replanned / self.requeued if self.requeued else 0.0
 
     @property
+    def elastic_admitted(self) -> int:
+        return sum(r.elastic_admitted for r in self.hours)
+
+    @property
+    def elastic_ejected(self) -> int:
+        return sum(r.elastic_ejected for r in self.hours)
+
+    @property
+    def elastic_completed(self) -> int:
+        return sum(r.elastic_completed for r in self.hours)
+
+    @property
+    def elastic_demoted(self) -> int:
+        return sum(r.elastic_demoted for r in self.hours)
+
+    @property
+    def elastic_goodput(self) -> float:
+        return sum(r.elastic_goodput for r in self.hours)
+
+    @property
+    def slo_violations(self) -> int:
+        return sum(c["violations"] for r in self.hours for c in r.slo.values())
+
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of online SLO window samples (all monitored classes)
+        that met their TTFT/TPOT targets over the day; 1.0 when the run had
+        no SLO monitor."""
+        ok = sum(c["ok"] for r in self.hours for c in r.slo.values())
+        total = sum(c["total"] for r in self.hours for c in r.slo.values())
+        return ok / total if total else 1.0
+
+    def slo_by_class(self) -> dict[str, dict]:
+        """Whole-day goodput-vs-SLO rows per monitored class."""
+        out: dict[str, dict] = {}
+        for row in self.hours:
+            for name, c in row.slo.items():
+                agg = out.setdefault(name, {"ok": 0, "total": 0,
+                                            "violations": 0})
+                for k in ("ok", "total", "violations"):
+                    agg[k] += c[k]
+        for name, agg in out.items():
+            agg["attainment"] = (agg["ok"] / agg["total"]
+                                 if agg["total"] else 1.0)
+        return out
+
+    @property
     def plan_p50_us(self) -> float:
         vals = [r.plan_p50_us for r in self.hours if r.plan_p50_us > 0]
         return statistics.median(vals) if vals else 0.0
@@ -233,6 +324,13 @@ class ColocationReport:
             "requeued": self.requeued,
             "requeue_replanned": self.requeue_replanned,
             "completed_jobs": sum(r.completed_jobs for r in self.hours),
+            "elastic_admitted": self.elastic_admitted,
+            "elastic_ejected": self.elastic_ejected,
+            "elastic_completed": self.elastic_completed,
+            "elastic_demoted": self.elastic_demoted,
+            "elastic_goodput": self.elastic_goodput,
+            "slo_violations": self.slo_violations,
+            "slo_attainment": self.slo_attainment,
             "hours": [r.key_metrics() for r in self.hours],
         }
 
@@ -276,12 +374,31 @@ class ColocationSim:
         # the cluster-event subscription keeps the CRDs fresh for those
         self.fleet.watch_cluster()
         self.sched.add_listener(self._on_decision)
-        # Fig. 2 factors come from the serving layer (lazy import keeps the
-        # model/serving stack out of core's import graph until needed)
-        from repro.serving import (relative_scheduled_factor,
-                                   scheduled_factor)
+        # Fig. 2 factors: the single source of truth (repro.core.perfmodel;
+        # repro.serving re-exports the same objects)
         self._rel_factor = relative_scheduled_factor
         self._scheduled_factor = scheduled_factor
+
+        # request-level elastic layer: the pool + SLO monitor exist whenever
+        # an ElasticConfig is in play; cfg.elastic additionally enables the
+        # two-level ladder (admission + instance-spin-up reserve).  The
+        # monitored-but-instance-only combination is the A/B baseline.
+        ecfg = cfg.elastic_cfg
+        if ecfg is None and cfg.elastic:
+            from repro.serving.elastic import ElasticConfig
+            ecfg = ElasticConfig()
+        self._ecfg = ecfg
+        if ecfg is not None:
+            # lazy import keeps the serving stack out of core's import
+            # graph until a scenario actually asks for the elastic layer
+            from repro.serving.elastic import ElasticPool, SLOMonitor
+            self.slo: SLOMonitor | None = SLOMonitor(ecfg)
+            self.pool: ElasticPool | None = ElasticPool(ecfg, self.slo)
+        else:
+            self.slo = None
+            self.pool = None
+        self._elastic: dict[int, OfflineJob] = {}   # jid -> elastic-hosted
+        self._egen: dict[int, int] = {}             # jid -> grant generation
 
         self.pending: deque[OfflineJob] = deque()
         self.jobs: list[OfflineJob] = []        # every job ever created
@@ -294,6 +411,7 @@ class ColocationSim:
         self._now = 0.0
         self._row_start = 0.0
         self._last_load = 0.0
+        self._next_load = diurnal_traffic(cfg.tick_hours % 24.0)
         self._scale_step = 0
         self._ran = False
         self.report = ColocationReport(engine=cfg.engine, seed=cfg.seed,
@@ -360,6 +478,9 @@ class ColocationSim:
             "requeued": 0, "requeue_replanned": 0, "completed_jobs": 0,
             "offline_goodput": 0.0, "preemptor_perf": 0.0,
             "served": {}, "reclaimed": {}, "factors": [],
+            "elastic_admitted": 0, "elastic_ejected": 0,
+            "elastic_completed": 0, "elastic_demoted": 0,
+            "elastic_goodput": 0.0,
         }
 
     def _instance_factor(self, inst) -> float:
@@ -407,6 +528,12 @@ class ColocationSim:
                 self._preemptor_uids.add(dec.instance.uid)
         else:
             acc["placements"] += 1
+        if (self.pool is not None and dec.instance is not None
+                and dec.instance.workload.kind == "online"):
+            inst = dec.instance
+            self.pool.register(inst.uid, inst.workload.name,
+                               inst.workload.gpus_per_instance,
+                               self._instance_factor(inst))
         for victim in dec.evicted:
             job = self._running.pop(victim.uid, None)
             if job is None:
@@ -416,6 +543,7 @@ class ColocationSim:
                                       job.remaining_hours - ran)
             job.requeues += 1
             job.uid = None
+            job.awaiting_replan = True
             acc["requeued"] += 1
             if self.cfg.requeue:
                 self._push(self._now + self.cfg.requeue_delay_hours,
@@ -448,6 +576,12 @@ class ColocationSim:
             decision_factor_mean=(statistics.fmean(acc["factors"])
                                   if acc["factors"] else 0.0),
             plan_p50_us=(statistics.median(log) if log else 0.0),
+            elastic_admitted=acc["elastic_admitted"],
+            elastic_ejected=acc["elastic_ejected"],
+            elastic_completed=acc["elastic_completed"],
+            elastic_demoted=acc["elastic_demoted"],
+            elastic_goodput=acc["elastic_goodput"],
+            slo=(self.slo.drain_counts() if self.slo is not None else {}),
         )
         self.report.hours.append(row)
         self._row_start = end
@@ -470,13 +604,32 @@ class ColocationSim:
         if t > self._row_start:
             self._flush(t)
         self._last_load = diurnal_traffic(t % 24.0)
+        self._next_load = diurnal_traffic((t + self.cfg.tick_hours) % 24.0)
+        if self.pool is not None:
+            # the reversed ladder, step 1 (degrade before kill): online
+            # load reclaims request slots — ejected offline requests land
+            # back in the pending queue — BEFORE the scale executor below
+            # preempts whole instances
+            for jid in self.pool.set_load(self._last_load):
+                self._eject_elastic(jid)
+        if self.cfg.elastic and self.pool is not None:
+            # reversed ladder, step 2: when the ramp's scale-up has no
+            # node-contiguous free block (completions free SCATTERED 1-2
+            # GPU fragments), demote whole offline instances into spare
+            # request slots to assemble one — an instance preemption that
+            # never happens
+            self._harvest_for_ramp()
         for pol in self.auto.policies:
             ev = self.auto.scale_to(pol, pol.desired(self._last_load), t)
             self._acc["failures"] += ev.failures
             for tier, n in ev.reclaimed_tiers.items():
                 self._acc["reclaimed"][tier] = (
                     self._acc["reclaimed"].get(tier, 0) + n)
+        if self.pool is not None:
+            self._reconcile_pool()
         self._drain()
+        if self.pool is not None:
+            self.pool.sample(self._last_load)
 
     def _handle_submit(self, job: OfflineJob) -> None:
         self.jobs.append(job)
@@ -514,16 +667,32 @@ class ColocationSim:
                                   step=self._scale_step))
 
     def _drain(self) -> None:
-        """Backfill the pending offline queue through chunked ``plan_batch``
-        admission (normal cycle only).  One FIFO pass per trigger; stops as
-        soon as an entire chunk fails to place, so a full cluster costs one
-        dispatch."""
+        """The backfill ladder.  Two-level mode packs pending offline work
+        into online replicas' spare request slots FIRST (`_elastic_pack`)
+        and spins up whole offline instances only for the residual, capped
+        by `_instance_gpu_budget` (free GPUs minus the next tick's online
+        reserve).  Instance admission is chunked ``plan_batch`` (normal
+        cycle only), FIFO, one pass per trigger; stops as soon as an entire
+        chunk fails to place, so a full cluster costs one dispatch."""
+        if self.cfg.elastic and self.pool is not None and self.pending:
+            self._elastic_pack()
         if not self.pending:
             return
+        budget = (self._instance_gpu_budget()
+                  if self.cfg.elastic and self.pool is not None else None)
         queue, self.pending = self.pending, deque()
         while queue:
-            chunk = [queue.popleft()
-                     for _ in range(min(self.cfg.backfill_chunk, len(queue)))]
+            chunk = []
+            while queue and len(chunk) < self.cfg.backfill_chunk:
+                need = queue[0].workload.gpus_per_instance
+                if budget is not None and need > budget:
+                    break       # FIFO head held by the online reserve
+                chunk.append(queue.popleft())
+                if budget is not None:
+                    budget -= need
+            if not chunk:
+                self.pending.extend(queue)
+                return
             txns = self.auto._timed_plan_batch([j.workload for j in chunk],
                                                allow_preempt=False)
             any_placed = False
@@ -534,6 +703,8 @@ class ColocationSim:
                     any_placed = True
                 else:
                     self.pending.append(job)
+                    if budget is not None:
+                        budget += job.workload.gpus_per_instance
             if not any_placed:
                 self.pending.extend(queue)
                 return
@@ -548,9 +719,183 @@ class ColocationSim:
         # instance runs slower and holds its GPUs proportionally longer
         job.rate = self._instance_factor(dec.instance)
         self._running[uid] = job
-        if job.requeues:
+        if job.awaiting_replan:
+            job.awaiting_replan = False
             self._acc["requeue_replanned"] += 1
         self._push(self._now + job.remaining_hours / job.rate, _COMPLETE, uid)
+
+    # ---- the request-level elastic layer (two-level ladder, level 1) -----------------
+    def _elastic_pack(self) -> None:
+        """Ladder step 1: FIFO-pack pending offline jobs into spare request
+        slots through the pool's SLO-guarded admission controller.  Jobs no
+        replica can host (no spare slots / KV headroom / SLO room) stay
+        pending for the instance-granular residual path."""
+        keep: deque[OfflineJob] = deque()
+        while self.pending:
+            job = self.pending.popleft()
+            got = self.pool.admit(job.jid, job.workload.gpus_per_instance)
+            if got is None:
+                keep.append(job)
+            else:
+                _, slots, rate = got
+                self._start_elastic(job, rate)
+        self.pending = keep
+
+    def _start_elastic(self, job: OfflineJob, rate: float) -> None:
+        job.uid = None
+        job.rate = rate
+        job.started_at = self._now
+        job.elastic_hosts += 1
+        self._elastic[job.jid] = job
+        gen = self._egen.get(job.jid, 0)
+        self._egen[job.jid] = gen
+        if job.awaiting_replan:
+            # a preempted instance victim replanned INTO request slots
+            job.awaiting_replan = False
+            self._acc["requeue_replanned"] += 1
+        self._acc["elastic_admitted"] += 1
+        self._push(self._now + job.remaining_hours / rate, _ECOMPLETE,
+                   (job.jid, gen))
+
+    def _eject_elastic(self, jid: int) -> None:
+        """Degrade-before-kill: a request-level grant was reclaimed (load
+        rise, SLO trip, or host replica gone).  Checkpoint progress and put
+        the job straight back in the pending queue — no requeue delay; the
+        whole point of request granularity is that ejection is cheap."""
+        job = self._elastic.pop(jid, None)
+        if job is None:
+            return
+        ran = (self._now - job.started_at) * job.rate
+        job.remaining_hours = max(self.cfg.min_requeue_hours,
+                                  job.remaining_hours - ran)
+        job.ejections += 1
+        self._egen[jid] = self._egen.get(jid, 0) + 1    # void the ecomplete
+        self._acc["elastic_ejected"] += 1
+        self.pending.append(job)
+
+    def _handle_ecomplete(self, payload: tuple[int, int]) -> None:
+        jid, gen = payload
+        job = self._elastic.get(jid)
+        if job is None or self._egen.get(jid, 0) != gen:
+            return               # stale event: the grant was ejected earlier
+        del self._elastic[jid]
+        self.pool.release(jid)
+        job.remaining_hours = 0.0
+        job.completed_at = self._now
+        acc = self._acc
+        acc["completed_jobs"] += 1
+        acc["elastic_completed"] += 1
+        good = job.duration_hours * job.workload.gpus_per_instance
+        acc["offline_goodput"] += good
+        acc["elastic_goodput"] += good
+        self._drain()
+
+    def _harvest_for_ramp(self) -> None:
+        """Reversed ladder, step 2 (the scale executor is step 3).
+
+        The `_instance_gpu_budget` reserve holds back the right GPU
+        *count* for the next tick's scale-up, but offline completions free
+        scattered 1-2 GPU fragments — an 8-GPU online replica still needs
+        a node-contiguous block, and a count-only reserve cannot provide
+        one.  Walk this tick's scale-up demand (policy order, the order the
+        scale executor runs in) against the per-node free map; when no node
+        can host a needed replica, demote whole offline instances into
+        spare request slots (SLO-guarded `ElasticPool.admit`, so the jobs
+        keep running at request granularity) until one node frees a block.
+        Demotion stops the moment the pool cannot absorb a job — then the
+        scale executor preempts exactly as before."""
+        free = [self.cluster.free_masks(n)[0].bit_count()
+                for n in range(self.cluster.num_nodes)]
+        for pol in self.auto.policies:
+            have = len(self.auto.replicas(pol.workload.name))
+            need_n = pol.desired(self._last_load) - have
+            gpn = pol.workload.gpus_per_instance
+            for _ in range(max(0, need_n)):
+                # best-fit against the simulated free map: the tightest
+                # node that already fits this replica absorbs it
+                fit = min((n for n in range(len(free)) if free[n] >= gpn),
+                          key=lambda n: (free[n], n), default=None)
+                if fit is not None:
+                    free[fit] -= gpn
+                    continue
+                fit = self._demote_for_block(gpn, free)
+                if fit is None:
+                    return      # pool saturated: fall back to preemption
+                free[fit] -= gpn
+
+    def _demote_for_block(self, need: int, free: list[int]) -> int | None:
+        """Assemble one ``need``-GPU block by demoting offline instances on
+        a single node into request slots.  Picks the node reaching the
+        block with the fewest demotions (tie: lowest node index), demoting
+        largest instances first.  Returns the node, or None if no node can
+        reach the block or the pool rejects a job mid-assembly."""
+        by_node: dict[int, list] = {}
+        for uid in sorted(self._running):
+            inst = self.cluster.instances.get(uid)
+            if inst is not None:
+                by_node.setdefault(inst.node, []).append(inst)
+        best = None             # (demotions, node, victims)
+        for n, insts in sorted(by_node.items()):
+            insts = sorted(insts, key=lambda i: (
+                -i.workload.gpus_per_instance, i.uid))
+            got, take = free[n], []
+            for inst in insts:
+                if got >= need:
+                    break
+                take.append(inst)
+                got += inst.workload.gpus_per_instance
+            if got >= need and (best is None or (len(take), n) < best[:2]):
+                best = (len(take), n, take)
+        if best is None:
+            return None
+        _, node, take = best
+        for inst in take:
+            if not self._demote_instance(inst):
+                # partial assembly still shrinks the Eq. 2 victim set
+                return None
+            free[node] += inst.workload.gpus_per_instance
+        return node
+
+    def _demote_instance(self, inst) -> bool:
+        """Demote one running offline instance into request slots: admit
+        through the SLO guard FIRST (no admission, no demotion), then
+        checkpoint progress, release the instance's GPUs, and continue the
+        job at the granted request-level rate."""
+        job = self._running.get(inst.uid)
+        if job is None:
+            return False
+        got = self.pool.admit(job.jid, job.workload.gpus_per_instance)
+        if got is None:
+            return False
+        del self._running[inst.uid]
+        self.cluster.evict(inst.uid)
+        ran = (self._now - job.started_at) * job.rate
+        job.remaining_hours = max(self.cfg.min_requeue_hours,
+                                  job.remaining_hours - ran)
+        job.uid = None          # voids the instance's pending _COMPLETE
+        self._acc["elastic_demoted"] += 1
+        _, _, rate = got
+        self._start_elastic(job, rate)
+        return True
+
+    def _reconcile_pool(self) -> None:
+        """Scale-downs and completions evict online replicas WITHOUT a
+        transaction; drop their ReplicaSlots and eject hosted requests."""
+        live = {uid for uid, inst in self.cluster.instances.items()
+                if inst.workload.kind == "online"}
+        for uid in sorted(set(self.pool.replicas) - live):
+            for jid in self.pool.unregister(uid):
+                self._eject_elastic(jid)
+
+    def _instance_gpu_budget(self) -> int:
+        """Ladder step 2 cap: free GPUs minus the online reserve the next
+        tick's scale-up will claim (`Autoscaler.online_reserve_gpus`), so
+        ramps place online replicas in the normal cycle instead of
+        preempting offline instances spun up one tick earlier."""
+        used = sum(i.workload.gpus_per_instance
+                   for i in self.cluster.instances.values())
+        free = self.cluster.spec.num_gpus * self.cluster.num_nodes - used
+        return max(0, free - self.auto.online_reserve_gpus(self._next_load))
 
     # ---- the loop --------------------------------------------------------------------
     def run(self) -> ColocationReport:
@@ -564,6 +909,7 @@ class ColocationSim:
             _REQUEUE: lambda t, p: self._handle_requeue(p),
             _SUBMIT: lambda t, p: self._handle_submit(p),
             _SCALE: lambda t, p: self._handle_scale(p),
+            _ECOMPLETE: lambda t, p: self._handle_ecomplete(p),
         }
         while self._heap and self._heap[0][0] <= horizon:
             t, kind, _, payload = heapq.heappop(self._heap)
@@ -610,4 +956,42 @@ def compare_day_cycle(
         "uplift": _uplift("scheduled_perf"),
         "preemptor_uplift": _uplift("preemptor_perf"),
         "goodput_uplift": _uplift("offline_goodput"),
+    }
+
+
+def compare_two_level(cfg: ColocationConfig) -> dict:
+    """The HyGen-style A/B: the SAME seeded day (identical arrival stream,
+    identical policies, identical engine) with the backfill ladder at
+    instance granularity only vs the two-level request+instance ladder.
+
+    Both runs carry the same `SLOMonitor`, so online SLO attainment is
+    measured identically; the instance-only run simply never admits
+    request-level work.  The expected direction: the two-level ladder
+    strictly increases offline goodput (valley capacity smaller than one
+    instance stops being wasted) at online SLO attainment no worse than the
+    baseline, with strictly fewer instance preemptions (the reserve guard,
+    request-granular ejection, and ramp-time instance demotion into request
+    slots shrink the Eq. 2 victim set at the ramps)."""
+    ecfg = cfg.elastic_cfg
+    if ecfg is None:
+        from repro.serving.elastic import ElasticConfig
+        ecfg = ElasticConfig()
+    base_cfg = dataclasses.replace(cfg, elastic=False, elastic_cfg=ecfg)
+    two_cfg = dataclasses.replace(base_cfg, elastic=True)
+    reports = {
+        "instance_only": run_day_cycle(base_cfg),
+        "two_level": run_day_cycle(two_cfg),
+    }
+    io, tl = reports["instance_only"], reports["two_level"]
+    return {
+        "reports": reports,
+        "goodput_uplift": ((tl.offline_goodput - io.offline_goodput)
+                           / io.offline_goodput if io.offline_goodput
+                           else 0.0),
+        "slo_attainment": {"instance_only": io.slo_attainment,
+                           "two_level": tl.slo_attainment},
+        "preemptions": {"instance_only": io.preemptions,
+                        "two_level": tl.preemptions},
+        "preemption_delta": tl.preemptions - io.preemptions,
+        "requeued": {"instance_only": io.requeued, "two_level": tl.requeued},
     }

@@ -16,38 +16,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.shapes import cache_capacity
-from repro.core.placement import min_tier_for
+# Fig. 2 tier-performance model: single source of truth is
+# repro.core.perfmodel (the day-cycle integral and the elastic layer's SLO
+# monitor consume the same constants); these are compat re-exports.
+from repro.core.perfmodel import (TIER_PERF, relative_scheduled_factor,
+                                  scheduled_factor)
 from repro.models.api import ModelApi
 
-# Paper Fig. 2: relative communication cost per placement tier converted to a
-# scheduled-performance multiplier (NUMA-local = 1.0, same-socket, cross-socket).
-TIER_PERF = {0: 1.0, 1: 10 / 12, 2: 10 / 32}
-
-
-def scheduled_factor(decision) -> float:
-    """Fig. 2 performance multiplier for a committed `SchedulingDecision`.
-
-    Raw engine throughput times this factor gives the paper's "scheduled
-    performance" of the instance at its placement tier.  Rejected decisions
-    (no placement) score 0.
-    """
-    if decision.placement is None:
-        return 0.0
-    return TIER_PERF[decision.placement.tier]
-
-
-def relative_scheduled_factor(spec, tier: int, need_gpus: int) -> float:
-    """Fig. 2 factor normalized by the best tier ``need_gpus`` can
-    physically achieve on the SKU.
-
-    A full-node instance necessarily spans sockets and serves at 1.0 when
-    it does, while a small instance misplaced across sockets is charged the
-    full cross-socket/NUMA-local cost ratio — so degradation measures
-    scheduling quality, not instance size.  This is the per-instance rate
-    the co-location day cycle (`repro.core.colocation`) integrates into its
-    scheduled-performance metric.
-    """
-    return TIER_PERF.get(tier, 0.0) / TIER_PERF[min_tier_for(spec, need_gpus)]
+__all__ = ["TIER_PERF", "scheduled_factor", "relative_scheduled_factor",
+           "Request", "RequestQueue", "BatchQueue", "ServeEngine"]
 
 
 @dataclasses.dataclass
@@ -59,22 +36,52 @@ class Request:
     done: bool = False
 
 
-class BatchQueue:
-    """Pads pending requests into fixed [B, S] prompt batches."""
+class RequestQueue:
+    """Pads pending requests into fixed [B, S] prompt batches.
 
-    def __init__(self, batch_size: int, seq_len: int) -> None:
+    With ``flush_after > 0`` the queue holds a partial batch back and waits
+    for a full ``batch_size`` (full batches amortize the jit'd prefill), but
+    only up to the age threshold: once the HEAD request has waited
+    ``flush_after`` seconds, the partial batch is released padded.  This
+    fixes the head-of-line stall where a sub-``batch_size`` tail could wait
+    forever behind an empty arrival stream — the elastic co-location layer
+    (`repro.serving.elastic`) relies on it to drain ejected offline
+    requests that will never be topped up to a full batch.  ``flush=True``
+    forces the partial batch out regardless of age (the synchronous
+    ``ServeEngine.run`` drain).  ``flush_after=0`` keeps the legacy eager
+    behavior: partial batches are served immediately.
+    """
+
+    def __init__(self, batch_size: int, seq_len: int,
+                 flush_after: float = 0.0, clock=time.monotonic) -> None:
         self.batch_size = batch_size
         self.seq_len = seq_len
+        self.flush_after = flush_after
+        self.clock = clock
         self.pending: list[Request] = []
+        self._arrived: list[float] = []     # aligned with ``pending``
+
+    def __len__(self) -> int:
+        return len(self.pending)
 
     def submit(self, req: Request) -> None:
         self.pending.append(req)
+        self._arrived.append(self.clock())
 
-    def next_batch(self) -> list[Request] | None:
+    def head_age(self) -> float:
+        """Seconds the oldest pending request has waited (0 if empty)."""
+        return self.clock() - self._arrived[0] if self.pending else 0.0
+
+    def next_batch(self, flush: bool = False) -> list[Request] | None:
         if not self.pending:
             return None
+        if (len(self.pending) < self.batch_size and not flush
+                and self.flush_after > 0
+                and self.head_age() < self.flush_after):
+            return None                     # wait for a full batch, bounded
         batch = self.pending[:self.batch_size]
         self.pending = self.pending[self.batch_size:]
+        self._arrived = self._arrived[self.batch_size:]
         return batch
 
     def pad_prompts(self, batch: list[Request]) -> np.ndarray:
@@ -83,6 +90,10 @@ class BatchQueue:
             s = min(len(r.prompt), self.seq_len)
             out[i, -s:] = r.prompt[:s]        # left-pad (decode continues right)
         return out
+
+
+#: compat alias — the eager (flush_after=0) behavior is the old BatchQueue
+BatchQueue = RequestQueue
 
 
 class ServeEngine:
@@ -102,7 +113,7 @@ class ServeEngine:
             api.decode_step,
             donate_argnums=(1,) if donate_cache else (),
         )
-        self.queue = BatchQueue(batch_size, seq_len)
+        self.queue = RequestQueue(batch_size, seq_len)
         self.stats = {"prefill_s": [], "decode_s": [], "tokens": 0}
 
     def _make_batch(self, prompts: np.ndarray) -> dict:
@@ -121,7 +132,9 @@ class ServeEngine:
         for r in requests:
             self.queue.submit(r)
         while True:
-            group = self.queue.next_batch()
+            # synchronous drain: flush partial tails instead of waiting for
+            # arrivals that will never come (RequestQueue HOL-stall fix)
+            group = self.queue.next_batch(flush=True)
             if group is None:
                 break
             prompts = self.queue.pad_prompts(group)

@@ -1,0 +1,179 @@
+"""Request-level elastic co-location: ReplicaSlots slot/KV accounting under
+tier degradation, SLOMonitor hysteresis, the two-level ladder's
+eject-before-preempt ordering at peak ramps, instance demotion ahead of a
+ramp scale-up, and the two-level day cycle's determinism + A/B direction."""
+import itertools
+
+from repro.core.colocation import (ColocationConfig, ColocationSim,
+                                   compare_two_level, default_policies,
+                                   run_day_cycle)
+from repro.core.perfmodel import TIER_PERF
+from repro.serving.elastic import (ElasticConfig, ElasticPool, ReplicaSlots,
+                                   SLOMonitor, max_offline_share,
+                                   predicted_tpot_ms, predicted_ttft_ms)
+
+WORST = TIER_PERF[2] / TIER_PERF[0]          # Fig. 2 cross-socket, 0.3125
+
+
+def two_level_config(**kw) -> ColocationConfig:
+    base = dict(num_nodes=8, seed=0, engine="imp", horizon_hours=12.0,
+                elastic=True, elastic_cfg=ElasticConfig())
+    base.update(kw)
+    return ColocationConfig(**base)
+
+
+# ---- ReplicaSlots accounting -------------------------------------------------------
+
+def test_replica_slots_kv_binds_before_slot_headroom():
+    cfg = ElasticConfig()                    # offline_ctx_factor=2.0
+    rs = ReplicaSlots(1, "A", 8, 1.0, cfg)
+    assert rs.total_slots == cfg.slots_per_gpu * 8
+    rs.set_load(0.5)
+    assert rs.online_slots == rs.total_slots // 2
+    # full SLO share: slot headroom would allow total/2, but each offline
+    # slot carries 2x the KV footprint, so the KV budget halves it
+    spare = rs.spare_slots(1.0)
+    assert spare == rs.total_slots // 4
+    assert spare < rs.total_slots - rs.online_slots
+    # grants consume both accounts
+    rs.jobs[7] = spare
+    assert rs.spare_slots(1.0) == 0
+    assert rs.kv_headroom_slots() == 0
+    assert rs.overflow_slots(1.0) == 0
+    # load rise pushes the same grant into overflow
+    rs.set_load(1.0)
+    assert rs.overflow_slots(1.0) == spare
+
+
+def test_tier_degradation_shrinks_share_and_rate():
+    cfg = ElasticConfig()
+    # NUMA-local replica affords full share at mid load...
+    assert max_offline_share(cfg, 1.0, 0.5) == 1.0
+    # ...the worst Fig. 2 tier affords none (guard * slo * 0.3125 < 1)
+    assert max_offline_share(cfg, WORST, 0.5) == 0.0
+    full = ReplicaSlots(1, "B", 4, 1.0, cfg)
+    degraded = ReplicaSlots(2, "B", 4, WORST, cfg)
+    assert degraded.rate(8, 2) == full.rate(8, 2) * WORST
+    # predictions scale the same way (shared interference model)
+    assert (predicted_tpot_ms(cfg, WORST, 0.5)
+            == predicted_tpot_ms(cfg, 1.0, 0.5) / WORST)
+    assert (predicted_ttft_ms(cfg, WORST, 0.5, 0.5)
+            == predicted_ttft_ms(cfg, 1.0, 0.5, 0.5) / WORST)
+
+
+def test_pool_ejects_youngest_grant_first():
+    cfg = ElasticConfig()
+    pool = ElasticPool(cfg, SLOMonitor(cfg))
+    pool.register(1, "A", 8, 1.0)
+    assert pool.admit(101, 1) is not None
+    assert pool.admit(102, 1) is not None
+    ejected = pool.set_load(1.0)             # peak: online reclaims all slots
+    assert ejected == [102, 101]             # youngest (highest jid) first
+    assert pool.hosted() == 0
+
+
+# ---- SLOMonitor hysteresis ---------------------------------------------------------
+
+def test_slo_monitor_trips_after_breach_ticks_and_recovers_after_window():
+    cfg = ElasticConfig()                    # breach_ticks=2, window=6
+    mon = SLOMonitor(cfg)
+    bad = cfg.tpot_target_ms * 2
+    ok = cfg.base_tpot_ms
+    uid = 5
+    assert not mon.observe("A", uid, ok, bad)
+    assert not mon.violated(uid), "one breach must not trip"
+    assert mon.allowed_share(uid, 1.0, 0.2) > 0
+    mon.observe("A", uid, ok, bad)
+    assert mon.violated(uid), "breach_ticks consecutive breaches trip"
+    assert mon.allowed_share(uid, 1.0, 0.2) == 0.0
+    # hysteresis: a tripped replica stays drained through window-1 cleans
+    for _ in range(cfg.window - 1):
+        mon.observe("A", uid, ok, ok)
+        assert mon.violated(uid)
+    mon.observe("A", uid, ok, ok)
+    assert not mon.violated(uid), "full clean window recovers"
+    counts = mon.drain_counts()["A"]
+    assert counts["violations"] == 2
+    assert counts["total"] == 2 + cfg.window
+    assert counts["ok"] == cfg.window
+    assert mon.drain_counts() == {}, "drain resets the row"
+
+
+def test_breach_interrupted_by_clean_sample_does_not_trip():
+    cfg = ElasticConfig()
+    mon = SLOMonitor(cfg)
+    bad, ok = cfg.tpot_target_ms * 2, cfg.base_tpot_ms
+    mon.observe("A", 1, ok, bad)
+    mon.observe("A", 1, ok, ok)              # resets the breach run
+    mon.observe("A", 1, ok, bad)
+    assert not mon.violated(1)
+
+
+# ---- the two-level ladder in the day cycle -----------------------------------------
+
+def test_peak_ramp_ejects_requests_before_preempting_instances():
+    """Reversed ladder: within every tick, request-level ejection
+    (`pool.set_load`) runs before the scale executor can preempt."""
+    cfg = two_level_config()
+    sim = ColocationSim(cfg, policies=default_policies(cfg))
+    order: list[tuple[float, str]] = []
+    pool_set_load, scale_to = sim.pool.set_load, sim.auto.scale_to
+
+    def spy_set_load(load):
+        order.append((sim._now, "a_eject"))
+        return pool_set_load(load)
+
+    def spy_scale_to(pol, want, hour=0.0):
+        order.append((sim._now, "b_scale"))
+        return scale_to(pol, want, hour)
+
+    sim.pool.set_load = spy_set_load
+    sim.auto.scale_to = spy_scale_to
+    rep = sim.run()
+    assert rep.elastic_admitted > 0, "scenario must exercise the pool"
+    ticks = 0
+    for _, group in itertools.groupby(order, key=lambda e: e[0]):
+        kinds = [k for _, k in group]
+        if "a_eject" in kinds and "b_scale" in kinds:
+            ticks += 1
+            assert kinds == sorted(kinds), \
+                "ejection must precede the scale executor in a tick"
+    assert ticks > 0
+
+
+def test_ramp_demotes_instances_instead_of_preempting():
+    """The same seeded day: instance-only preempts at the ramp, the
+    two-level ladder demotes offline instances into request slots and the
+    preemption never happens."""
+    ab = compare_two_level(ColocationConfig(num_nodes=8, seed=0, engine="imp",
+                                            horizon_hours=12.0))
+    io, tl = ab["reports"]["instance_only"], ab["reports"]["two_level"]
+    assert io.preemptions > 0, "baseline must exercise preemption"
+    assert tl.preemptions < io.preemptions
+    assert tl.elastic_demoted > 0
+    assert tl.requeued < io.requeued
+    # demoted jobs keep running: goodput strictly rises, SLO no worse
+    assert ab["goodput_uplift"] > 0
+    assert tl.slo_attainment >= io.slo_attainment
+    assert tl.elastic_admitted > 0 and tl.elastic_completed > 0
+
+
+def test_two_level_day_metrics_deterministic():
+    a = run_day_cycle(two_level_config())
+    b = run_day_cycle(two_level_config())
+    assert a.key_metrics() == b.key_metrics()
+    assert a.elastic_admitted > 0 and a.elastic_completed > 0
+
+
+def test_monitored_instance_only_run_schedules_identically():
+    """elastic_cfg WITHOUT elastic=True is the monitored baseline: the SLO
+    monitor observes but the ladder must not change a single decision."""
+    plain = run_day_cycle(ColocationConfig(num_nodes=8, seed=0, engine="imp",
+                                           horizon_hours=12.0))
+    monitored = run_day_cycle(ColocationConfig(
+        num_nodes=8, seed=0, engine="imp", horizon_hours=12.0,
+        elastic_cfg=ElasticConfig()))
+    for metric in ("scheduled_perf", "offline_goodput", "preemptions",
+                   "placements", "requeued", "requeue_replanned"):
+        assert getattr(monitored, metric) == getattr(plain, metric)
+    assert monitored.elastic_admitted == 0

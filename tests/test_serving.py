@@ -87,6 +87,42 @@ def test_swa_window_limits_receptive_field():
                                rtol=1e-3)
 
 
+def test_request_queue_partial_batch_flush():
+    """Head-of-line fix: a sub-batch tail waits for a full batch only up to
+    ``flush_after`` seconds of head age, then flushes partial; ``flush=True``
+    forces it out immediately."""
+    from repro.serving import RequestQueue
+
+    now = {"t": 0.0}
+    q = RequestQueue(batch_size=4, seq_len=32, flush_after=5.0,
+                     clock=lambda: now["t"])
+    reqs = [Request(rid=i, prompt=np.array([1, 2], np.int32),
+                    max_new_tokens=1) for i in range(6)]
+    q.submit(reqs[0])
+    q.submit(reqs[1])
+    assert q.next_batch() is None, "partial batch held back while young"
+    now["t"] = 4.9
+    assert q.next_batch() is None
+    now["t"] = 5.0
+    batch = q.next_batch()
+    assert batch is not None and [r.rid for r in batch] == [0, 1], \
+        "head age past flush_after releases the partial batch"
+    # a full batch goes out regardless of age
+    now["t"] = 10.0
+    for r in reqs[2:6]:
+        q.submit(r)
+    assert [r.rid for r in q.next_batch()] == [2, 3, 4, 5]
+    # flush=True forces a young partial out (the ServeEngine.run drain)
+    q.submit(Request(rid=9, prompt=np.array([1], np.int32), max_new_tokens=1))
+    assert [r.rid for r in q.next_batch(flush=True)] == [9]
+    assert q.next_batch(flush=True) is None, "empty queue stays None"
+    # flush_after=0 keeps the legacy eager behavior
+    eager = RequestQueue(batch_size=4, seq_len=32)
+    eager.submit(Request(rid=11, prompt=np.array([1], np.int32),
+                         max_new_tokens=1))
+    assert [r.rid for r in eager.next_batch()] == [11]
+
+
 def test_serve_engine_end_to_end():
     cfg = get_config("llama3.2-1b", smoke=True)
     api = build_model(cfg)
