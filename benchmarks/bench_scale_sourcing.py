@@ -1,0 +1,250 @@
+"""Scale sweep — plan latency from 24 to 10k nodes, sharded vs single-device.
+
+The tentpole claim of the mesh-sharded cluster state: end-to-end ``plan()``
+P50 must grow SUB-linearly in node count (per-node cost falls as the cluster
+grows — fixed dispatch overhead amortizes and the node axis shards across
+the device mesh), and the ``imp_sharded`` engine must stay bit-identical to
+``imp_batched`` at every size.
+
+Protocol
+--------
+The parent process re-invokes this module as a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the sharded
+engine gets a real 8-device mesh even on a single-CPU host (the flag must
+be set before jax initializes, hence the subprocess).  The child, per size
+in ``SIZES``:
+
+* builds one saturated cluster per engine (sizes above the 128-node base
+  are TILED — the base's instance pattern replayed per 128-node block —
+  because random saturation does an O(instances x nodes) feasibility scan
+  that is prohibitive at 10k nodes, and bind-replay is O(instances));
+* runs a deterministic decision sequence (preemptive plans, commits, one
+  ``plan_batch``) on BOTH engines and compares decision keys — the
+  ``parity`` flag per size;
+* times ``plan_e2e`` (alternating B/C preemptors, pure reads),
+  ``plan_batch8`` (persistent session, per-request), and
+  ``plan_normal_e2e`` (60%-filled cluster, normal-cycle admission) for
+  both engines, tagging any sample that still compiles (`CompileWatch`).
+
+The parent merges the result as the ``scale`` block of
+``BENCH_sourcing.json``; ``benchmarks.check_sourcing_regression`` gates the
+committed block (sub-linear growth + parity at every size) plus a live
+small-size parity re-check.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import FULL, emit, p
+
+try:  # parent-only import cycle guard: the child imports this module too
+    from .bench_sourcing_latency import BENCH_JSON
+except ImportError:  # pragma: no cover - running as a script
+    import pathlib
+
+    BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sourcing.json"
+
+SIZES = (24, 128, 1024, 10240)
+DEVICES = 8
+BASE_NODES = 128          # tiling block for sizes above it
+ENGINES = ("imp_batched", "imp_sharded")
+
+#: per-size sample counts: (plan_e2e samples, batch rounds, normal samples)
+_SAMPLES_FULL = {24: (20, 10, 20), 128: (20, 10, 20),
+                 1024: (12, 6, 12), 10240: (6, 3, 6)}
+_SAMPLES_SMALL = {24: (10, 6, 10), 128: (10, 6, 10),
+                  1024: (6, 4, 6), 10240: (4, 2, 4)}
+
+_CHILD_FLAG = "--child"
+_MARK = "SCALE_RESULT_JSON:"
+
+
+# ---------------------------------------------------------------------------
+# child: runs under the forced 8-device host platform
+# ---------------------------------------------------------------------------
+
+def _decision_key(dec):
+    return (str(dec.kind), dec.node, tuple(dec.victims),
+            None if dec.placement is None else dec.placement.tier, dec.hit)
+
+
+def build_scaled_cluster(num_nodes: int, seed: int = 0, fill: float = 1.0):
+    """A saturated (or ``fill``-fraction) cluster at any node count.
+
+    Up to `BASE_NODES` the regular seeded random saturation runs directly;
+    larger sizes replay a BASE_NODES-sized base pattern per block so
+    construction stays O(num_nodes) instead of O(num_nodes^2).
+    """
+    from repro.core.cluster import Cluster
+    from repro.core.placement import Placement
+    from repro.core.simulator import SimConfig, build_saturated_cluster
+    from repro.core.workload import TABLE3_INITIAL_INSTANCES, table3_workloads
+
+    base_nodes = min(num_nodes, BASE_NODES)
+    cfg = SimConfig(num_nodes=base_nodes, seed=seed)
+    if fill >= 1.0:
+        base = build_saturated_cluster(cfg)
+    else:
+        workloads = table3_workloads()
+        scale = base_nodes / 100.0 * fill
+        counts = {k: max(0, round(v * scale))
+                  for k, v in TABLE3_INITIAL_INSTANCES.items()}
+        base = build_saturated_cluster(cfg, workloads, counts)
+    if num_nodes == base_nodes:
+        return base
+    big = Cluster(base.spec, num_nodes)
+    for blk in range(num_nodes // base_nodes):
+        off = blk * base_nodes
+        for inst in base.instances.values():
+            big.bind(inst.workload, inst.node + off,
+                     Placement(gpu_mask=inst.gpu_mask,
+                               cg_mask=inst.cg_mask, tier=0))
+    return big
+
+
+def _parity_sequence(sched, wl, batch: int):
+    """Deterministic mixed plan/commit/batch sequence; returns decision keys.
+
+    Commits mutate the cluster, so the same sequence on two engines'
+    clusters exercises the delta-encoder path between plans.
+    """
+    keys = []
+    for name in ("B", "C", "B"):
+        txn = sched.plan(wl[name], allow_normal=True)
+        keys.append(_decision_key(txn.decision))
+        if txn.decision.kind != "reject":
+            txn.commit()
+    txns = sched.plan_batch([wl["B"]] * batch)
+    for i, t in enumerate(txns):
+        keys.append(_decision_key(t.decision))
+        if i == 0 and t.decision.kind != "reject":
+            t.commit()
+    return keys
+
+
+def _child_main() -> None:
+    import time
+
+    from repro.core import TopoScheduler, table3_workloads
+    from repro.core.simulator import CompileWatch
+
+    protocol = os.environ.get("SCALE_PROTOCOL", "small")
+    per_size = _SAMPLES_FULL if protocol == "full" else _SAMPLES_SMALL
+    wl = {w.name: w for w in table3_workloads()}
+    watch = CompileWatch.get()
+    rows: list[dict] = []
+    parity: dict[str, bool] = {}
+
+    import jax
+    assert len(jax.devices()) == DEVICES, jax.devices()
+
+    for n in SIZES:
+        samples, rounds, n_samples = per_size[n]
+        keys: dict[str, list] = {}
+        scheds: dict[str, TopoScheduler] = {}
+        batch = 8 if n <= 1024 else 4
+        for engine in ENGINES:
+            cluster = build_scaled_cluster(n, seed=0)
+            sched = TopoScheduler(cluster, engine=engine, alpha=0.5)
+            keys[engine] = _parity_sequence(sched, wl, batch)
+            scheds[engine] = sched
+        parity[str(n)] = keys[ENGINES[0]] == keys[ENGINES[1]]
+
+        for engine in ENGINES:
+            sched = scheds[engine]
+            # warm both preemptor programs at this size's buckets
+            sched.plan(wl["B"])
+            sched.plan(wl["C"])
+            times, compiled = [], 0
+            for i in range(samples):
+                m = watch.mark()
+                t0 = time.perf_counter()
+                sched.plan(wl["B"] if i % 2 == 0 else wl["C"])
+                times.append((time.perf_counter() - t0) * 1e6)
+                compiled += watch.delta(m) > 0
+            rows.append({"nodes": n, "engine": engine, "metric": "plan_e2e",
+                         "p50_us": p(times, 50), "p90_us": p(times, 90),
+                         "n": samples, "compiled_n": compiled})
+
+            sched.plan_batch([wl["B"]] * 8)      # warm round (excluded)
+            times, compiled = [], 0
+            for _ in range(rounds):
+                m = watch.mark()
+                t0 = time.perf_counter()
+                sched.plan_batch([wl["B"]] * 8)
+                times.append((time.perf_counter() - t0) * 1e6 / 8)
+                compiled += watch.delta(m) > 0
+            rows.append({"nodes": n, "engine": engine,
+                         "metric": "plan_batch8",
+                         "p50_us": p(times, 50), "p90_us": p(times, 90),
+                         "n": rounds, "compiled_n": compiled})
+
+            cluster = build_scaled_cluster(n, seed=1, fill=0.6)
+            sched = TopoScheduler(cluster, engine=engine, alpha=0.5)
+            dec = sched.plan(wl["B"]).decision   # warm, excluded
+            assert dec.placed, f"60% fill not placeable at n={n}"
+            times, compiled = [], 0
+            for _ in range(n_samples):
+                m = watch.mark()
+                t0 = time.perf_counter()
+                sched.plan(wl["B"])
+                times.append((time.perf_counter() - t0) * 1e6)
+                compiled += watch.delta(m) > 0
+            rows.append({"nodes": n, "engine": engine,
+                         "metric": "plan_normal_e2e",
+                         "p50_us": p(times, 50), "p90_us": p(times, 90),
+                         "n": n_samples, "compiled_n": compiled})
+        print(f"# scale n={n} done (parity={parity[str(n)]})",
+              file=sys.stderr, flush=True)
+
+    print(_MARK + json.dumps(
+        {"protocol": protocol, "devices": DEVICES, "sizes": list(SIZES),
+         "base_nodes": BASE_NODES, "rows": rows, "parity": parity}))
+
+
+# ---------------------------------------------------------------------------
+# parent: spawn the 8-device child, merge + emit
+# ---------------------------------------------------------------------------
+
+def run(full: bool = FULL) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={DEVICES}").strip()
+    env["SCALE_PROTOCOL"] = "full" if full else "small"
+    env["PYTHONPATH"] = "src" + (os.pathsep + env["PYTHONPATH"]
+                                 if env.get("PYTHONPATH") else "")
+    repo_root = BENCH_JSON.parent
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_scale_sourcing", _CHILD_FLAG],
+        cwd=repo_root, env=env, capture_output=True, text=True, timeout=3600)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"scale child failed ({proc.returncode}):\n{proc.stderr[-4000:]}")
+    payload = None
+    for line in proc.stdout.splitlines():
+        if line.startswith(_MARK):
+            payload = json.loads(line[len(_MARK):])
+    if payload is None:
+        raise RuntimeError(f"no scale result in child output:\n"
+                           f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}")
+    for row in payload["rows"]:
+        emit(f"scale_{row['nodes']}_{row['engine']}_{row['metric']}",
+             row["p50_us"],
+             f"p90={row['p90_us']:.1f}us compiled_n={row['compiled_n']}")
+    for size, ok in payload["parity"].items():
+        emit(f"scale_{size}_sharded_parity", 0.0,
+             "identical" if ok else "DIVERGED")
+    doc = json.loads(BENCH_JSON.read_text()) if BENCH_JSON.exists() else {}
+    doc["scale"] = payload
+    BENCH_JSON.write_text(json.dumps(doc, indent=2) + "\n")
+    return payload
+
+
+if __name__ == "__main__":
+    if _CHILD_FLAG in sys.argv:
+        _child_main()
+    else:
+        run()

@@ -25,7 +25,16 @@ workload (``metric`` field):
 
 A ``warmup`` block tracks cold vs ``TopoScheduler(warmup=True)`` first-plan
 latency (cold P90 is compile-dominated; the warm numbers show construction
--time pre-compilation removing it).  Results go to ``BENCH_sourcing.json``
+-time pre-compilation removing it).
+
+Timed runs of the jit engines are preceded by an identical untimed pass:
+the experiment runners are seeded-deterministic, so the warm pass compiles
+every (patch-bucket, gather-bucket) jit variant the timed pass will hit —
+without it the P90s measured XLA compiles (seconds) instead of dispatches
+(microseconds).  Any timed sample that STILL triggers a compile is counted
+in the row's ``compiled_n`` field (via `repro.core.simulator.CompileWatch`)
+so a polluted distribution is visible in the committed baseline rather
+than silently folded into P90.  Results go to ``BENCH_sourcing.json``
 at the repo root so the perf trajectory is tracked across PRs; CI's
 regression step (``benchmarks.check_sourcing_regression``) compares a fresh
 small-protocol run of the fused engine against the committed numbers.
@@ -45,6 +54,24 @@ from repro.core.simulator import (SimConfig, build_saturated_cluster,
 from .common import FULL, emit, p
 
 ENGINES = ("godel", "exhaustive", "imp", "imp_batched_legacy", "imp_batched")
+
+#: engines whose dispatches are jit-compiled: their timed experiments get an
+#: identical untimed pass first so every jit bucket is warm (host engines
+#: have no compile caches to warm — a second pass would just double runtime)
+JIT_ENGINES = ("imp_batched_legacy", "imp_batched", "imp_sharded", "imp_jax")
+
+
+def _warmed(runner, cfg, engine, *args, **kwargs):
+    """Run ``runner`` twice, discarding the first pass, for jit engines.
+
+    The runners rebuild their clusters from ``cfg.seed`` deterministically,
+    so the warm pass hits exactly the (patch-bucket, gather-bucket) variants
+    the timed pass will — its report is thrown away and only the warm-cache
+    rerun is returned.
+    """
+    if engine in JIT_ENGINES:
+        runner(cfg, engine, *args, **kwargs)
+    return runner(cfg, engine, *args, **kwargs)
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sourcing.json"
 
@@ -116,12 +143,14 @@ def run(full: bool = FULL) -> list[dict]:
             # interpret-mode Pallas is orders slower on CPU; keep its sample
             # count small so the smoke protocol stays quick
             n_samples = samples if engine != "imp_pallas" else min(samples, 5)
-            rep = run_latency_experiment(cfg, engine, wl, samples=n_samples)
+            rep = _warmed(run_latency_experiment, cfg, engine, wl,
+                          samples=n_samples)
             p50, p90 = p(rep.sourcing_us, 50), p(rep.sourcing_us, 90)
             base[engine] = (p50, p90)
             row = {"workload": label, "engine": engine, "metric": "sourcing",
                    "p50_us": p50, "p90_us": p90, "n": rep.preemptions,
-                   "hit_rate": rep.hit_rate}
+                   "hit_rate": rep.hit_rate,
+                   "compiled_n": rep.compiled_samples}
             if engine == "imp_pallas":
                 row["interpret"] = _interpret_mode()
             rows.append(row)
@@ -139,26 +168,29 @@ def run(full: bool = FULL) -> list[dict]:
             emit(f"table5_{label}_fused_speedup", 0.0,
                  f"fused_p50_over_legacy={speedup:.2f}x")
         # filtering-inclusive end-to-end plan() + batched planning (fused)
-        rep = run_plan_latency_experiment(cfg, "imp_batched", wl,
-                                          samples=samples)
+        rep = _warmed(run_plan_latency_experiment, cfg, "imp_batched", wl,
+                      samples=samples)
         p50, p90 = p(rep.sourcing_us, 50), p(rep.sourcing_us, 90)
         rows.append({"workload": label, "engine": "imp_batched",
                      "metric": "plan_e2e", "p50_us": p50, "p90_us": p90,
-                     "n": rep.preemptions, "hit_rate": rep.hit_rate})
+                     "n": rep.preemptions, "hit_rate": rep.hit_rate,
+                     "compiled_n": rep.compiled_samples})
         emit(f"table5_{label}_fused_plan_e2e", p50, f"p90={p90:.1f}us "
              f"hit={rep.hit_rate:.2f}")
-        rep = run_plan_batch_latency(cfg, "imp_batched", wl, batch=8,
-                                     rounds=5 if not full else 10)
+        rep = _warmed(run_plan_batch_latency, cfg, "imp_batched", wl, batch=8,
+                      rounds=5 if not full else 10)
         p50, p90 = p(rep.sourcing_us, 50), p(rep.sourcing_us, 90)
         rows.append({"workload": label, "engine": "imp_batched",
                      "metric": "plan_batch8", "p50_us": p50, "p90_us": p90,
-                     "n": rep.preemptions, "hit_rate": rep.hit_rate})
+                     "n": rep.preemptions, "hit_rate": rep.hit_rate,
+                     "compiled_n": rep.compiled_samples})
         emit(f"table5_{label}_fused_plan_batch8", p50,
              f"per_request p90={p90:.1f}us")
         # normal-cycle admission: fused chained dispatch vs the host loop
         normal_base = {}
         for engine in ("imp", "imp_batched"):
-            rep = run_plan_normal_latency(cfg, engine, wl, samples=samples)
+            rep = _warmed(run_plan_normal_latency, cfg, engine, wl,
+                          samples=samples)
             p50, p90 = p(rep.sourcing_us, 50), p(rep.sourcing_us, 90)
             normal_base[engine] = p50
             rows.append({"workload": label, "engine": engine,
@@ -167,16 +199,24 @@ def run(full: bool = FULL) -> list[dict]:
                          # placed-decision topology-hit rate (preemptions
                          # are 0 on this protocol, so the report property
                          # would read 0)
-                         "hit_rate": rep.hits / max(1, len(rep.sourcing_us))})
+                         "hit_rate": rep.hits / max(1, len(rep.sourcing_us)),
+                         "compiled_n": rep.compiled_samples})
             emit(f"table5_{label}_{engine}_plan_normal_e2e", p50,
                  f"p90={p90:.1f}us")
         if normal_base.get("imp_batched"):
             emit(f"table5_{label}_normal_fused_speedup", 0.0,
                  f"fused_over_host={normal_base['imp'] / normal_base['imp_batched']:.2f}x")
-    BENCH_JSON.write_text(json.dumps(
-        {"protocol": "full" if full else "small",
-         "num_nodes": cfg.num_nodes, "seed": cfg.seed, "samples": samples,
-         "warmup": warmup, "rows": rows}, indent=2) + "\n")
+    payload = {"protocol": "full" if full else "small",
+               "num_nodes": cfg.num_nodes, "seed": cfg.seed,
+               "samples": samples, "warmup": warmup, "rows": rows}
+    if BENCH_JSON.exists():
+        try:    # keep the scale-sweep block (written by bench_scale_sourcing)
+            old = json.loads(BENCH_JSON.read_text())
+            if "scale" in old:
+                payload["scale"] = old["scale"]
+        except Exception:
+            pass
+    BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
     return rows
 
 

@@ -11,7 +11,14 @@ identity check) and fails if
   ``BENCH_sourcing.json`` baseline, or
 * the fused hit rate diverges from the legacy engine at the same seed
   (the fused on-device Filtering + Eq. 2 selection must be
-  decision-identical).
+  decision-identical), or
+* the committed ``scale`` block (written by ``benchmarks.
+  bench_scale_sourcing``: plan P50s at 24..10k nodes) is missing, shows
+  SUPER-``SUBLINEAR_FRACTION``-linear ``imp_sharded`` plan-P50 growth from
+  the smallest to the largest size, or records an ``imp_sharded``-vs-``imp_batched``
+  decision divergence at any size — plus a LIVE parity re-check at the two
+  smallest sizes (single-process, degenerate one-device mesh: the sharded
+  evaluators must stay bit-identical without the 8-device subprocess).
 
 Baseline rows tagged ``"interpret": true`` (Mosaic-interpreter Pallas runs
 on CPU) are placeholders, not wall-clock measurements — the gate skips
@@ -36,6 +43,85 @@ from .bench_sourcing_latency import BENCH_JSON
 from .common import p
 
 MAX_REGRESSION = 2.0
+
+#: sub-linearity gate for the scale sweep: P50 growth from the smallest to
+#: the largest committed size must stay under this fraction of the node
+#: -count growth (0.5 = per-node cost at 10k nodes is at most HALF the
+#: per-node cost at 24 — comfortably met by the measured ~0.1-0.3, loose
+#: enough for machine noise)
+SUBLINEAR_FRACTION = 0.5
+
+#: metrics the sub-linearity gate covers (plan_batch8 is recorded in the
+#: block but not growth-gated: per-request amortization already makes it
+#: the cheapest path and its small per-size round counts are noisier)
+SCALE_GATED_METRICS = ("plan_e2e", "plan_normal_e2e")
+
+#: engines the sub-linearity gate covers.  The scaling claim is about the
+#: mesh-sharded engine; ``imp_batched`` rows stay in the block as the
+#: single-device reference (and are parity-gated at every size) but its
+#: growth is printed without gating — its 24-node P50 is noise-dominated
+#: (a few samples of ~1ms against a multi-second jit tail) and sits right
+#: on the cap, which would make CI a coin flip.
+SCALE_GATED_ENGINES = ("imp_sharded",)
+
+
+def check_scale(baseline: dict) -> int:
+    """Gate the committed scale block + live small-size sharded parity."""
+    scale = baseline.get("scale")
+    if not scale:
+        print("FAIL: no scale block in BENCH_sourcing.json "
+              "(run benchmarks.bench_scale_sourcing)")
+        return 1
+    failures = 0
+    rows = {(r["nodes"], r["engine"], r["metric"]): r for r in scale["rows"]}
+    sizes = sorted(scale["sizes"])
+    n_min, n_max = sizes[0], sizes[-1]
+    node_ratio = n_max / n_min
+    for engine in ("imp_batched", "imp_sharded"):
+        gated = engine in SCALE_GATED_ENGINES
+        for metric in SCALE_GATED_METRICS:
+            lo = rows.get((n_min, engine, metric))
+            hi = rows.get((n_max, engine, metric))
+            if not lo or not hi or not lo["p50_us"]:
+                print(f"FAIL scale: missing {engine}/{metric} rows")
+                failures += 1
+                continue
+            growth = hi["p50_us"] / lo["p50_us"]
+            cap = SUBLINEAR_FRACTION * node_ratio
+            if not gated:
+                status = "reference, ungated"
+            elif growth <= cap:
+                status = "ok"
+            else:
+                status = "REGRESSION"
+            print(f"scale {engine}/{metric}: p50 {lo['p50_us']:.0f}us@{n_min}"
+                  f" -> {hi['p50_us']:.0f}us@{n_max} = {growth:.1f}x growth "
+                  f"(cap {cap:.0f}x, nodes grew {node_ratio:.0f}x) [{status}]")
+            if gated and growth > cap:
+                failures += 1
+    for size in scale["sizes"]:
+        if not scale["parity"].get(str(size)):
+            print(f"FAIL scale: imp_sharded decisions diverged from "
+                  f"imp_batched at {size} nodes in the committed block")
+            failures += 1
+    # live parity: rerun the decision sequence at the two smallest sizes
+    from repro.core import TopoScheduler, table3_workloads
+
+    from .bench_scale_sourcing import _parity_sequence, build_scaled_cluster
+
+    wl = {w.name: w for w in table3_workloads()}
+    for n in sizes[:2]:
+        keys = {}
+        for engine in ("imp_batched", "imp_sharded"):
+            sched = TopoScheduler(build_scaled_cluster(n, seed=0),
+                                  engine=engine, alpha=0.5)
+            keys[engine] = _parity_sequence(sched, wl, batch=8)
+        same = keys["imp_batched"] == keys["imp_sharded"]
+        print(f"scale live parity @{n} nodes: "
+              f"{'identical' if same else 'DIVERGED'}")
+        if not same:
+            failures += 1
+    return failures
 
 
 def main() -> int:
@@ -116,6 +202,7 @@ def main() -> int:
         else:
             print(f"{label}: hit-rate identical to legacy "
                   f"({fused.hits}/{fused.preemptions})")
+    failures += check_scale(baseline)
     if failures:
         print(f"FAIL: {failures} sourcing-latency gate(s) tripped")
         return 1

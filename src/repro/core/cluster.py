@@ -61,6 +61,11 @@ class Cluster:
         # which notifies subscribers (the SourcingContext) so dense engine
         # rows refresh incrementally instead of rebuilding from instance lists
         self._dirty_listeners: list[Callable[[int], None]] = []
+        # op fan-out: bind/evict/restore ALSO publish the exact mutation
+        # (node, ±1, gpu_mask, cg_mask, priority, uid, preemptible) so the
+        # sourcing mirror can replay dirty rows vectorized instead of
+        # re-encoding each one from the instance lists (`encode_row`)
+        self._op_listeners: list[Callable[[tuple], None]] = []
         self._sourcing_ctx: "SourcingContext | None" = None
         self._device_state: "DeviceClusterState | None" = None
 
@@ -73,6 +78,7 @@ class Cluster:
         self.topos[node].allocate(inst.name, gpus, cgs)
         self.instances[inst.uid] = inst
         self._by_node[node].add(inst.uid)
+        self._emit_op(node, +1, inst)
         self.invalidate_node(node)
         return inst
 
@@ -80,6 +86,7 @@ class Cluster:
         inst = self.instances.pop(uid)
         self.topos[inst.node].release(inst.name)
         self._by_node[inst.node].discard(uid)
+        self._emit_op(inst.node, -1, inst)
         self.invalidate_node(inst.node)
         return inst
 
@@ -97,6 +104,7 @@ class Cluster:
         self.topos[inst.node].allocate(inst.name, gpus, cgs)
         self.instances[inst.uid] = inst
         self._by_node[inst.node].add(inst.uid)
+        self._emit_op(inst.node, +1, inst)
         self.invalidate_node(inst.node)
         return inst
 
@@ -111,14 +119,43 @@ class Cluster:
         """Subscribe to per-node invalidation events (bind/evict/restore)."""
         self._dirty_listeners.append(fn)
 
+    def _emit_op(self, node: int, delta: int, inst: Instance) -> None:
+        if self._op_listeners:
+            op = (node, delta, inst.gpu_mask, inst.cg_mask, inst.priority,
+                  inst.uid, inst.preemptible)
+            for fn in self._op_listeners:
+                fn(op)
+
+    def add_op_listener(self, fn: Callable[[tuple], None]) -> None:
+        """Subscribe to the exact mutation stream behind ``invalidate_node``:
+        one ``(node, ±1, gpu_mask, cg_mask, priority, uid, preemptible)``
+        tuple per bind/evict/restore.  External ``invalidate_node`` calls do
+        NOT produce ops — consumers must cross-check dirty marks against op
+        counts (see `SourcingContext.refresh`)."""
+        self._op_listeners.append(fn)
+
     def sourcing_context(self) -> "SourcingContext":
         """The lazily-created incremental array cache for fused sourcing."""
         if self._sourcing_ctx is None:
             self._sourcing_ctx = SourcingContext(self)
         return self._sourcing_ctx
 
-    def device_state(self) -> "DeviceClusterState":
-        """The lazily-created device-resident struct-of-arrays state."""
+    def device_state(self, sharded: bool = False) -> "DeviceClusterState":
+        """The lazily-created device-resident struct-of-arrays state.
+
+        ``sharded=True`` returns (creating or replacing as needed) a
+        `repro.core.cluster_parallel.ShardedDeviceClusterState`: the same
+        three stacked tensors, node axis padded to a multiple of the device
+        count and laid out with a `NamedSharding` over a 1-D mesh of every
+        local device.  The fused evaluators then compile to SPMD programs
+        where the per-node class math runs shard-local and only the final
+        argmax chain crosses shards (the `imp_sharded` engine)."""
+        if sharded:
+            from .cluster_parallel import ShardedDeviceClusterState
+
+            if not isinstance(self._device_state, ShardedDeviceClusterState):
+                self._device_state = ShardedDeviceClusterState(self)
+            return self._device_state
         if self._device_state is None:
             self._device_state = DeviceClusterState(self)
         return self._device_state
@@ -349,16 +386,155 @@ class SourcingContext:
         self.overflow = np.zeros(n, bool)           # count > cap: truncated
         self.next_prio = np.full(n, 2**31 - 1, np.int32)  # 1st unstored prio
         self._dirty: set[int] = set(range(n))
-        cluster.add_dirty_listener(self._dirty.add)
+        # journal-driven refresh: the exact mutation stream since the last
+        # refresh, plus a per-node dirty-mark counter.  A dirty row whose
+        # mark count equals its op count was mutated ONLY through
+        # bind/evict/restore and replays vectorized; anything else (external
+        # invalidation, truncated base row, giant op bursts) falls back to
+        # `encode_row`.  Rows never encoded at all (`_fresh`) always do.
+        self._journal: list[tuple] = []
+        self._marks: dict[int, int] = {}
+        self._fresh: set[int] = set(range(n))
+        cluster.add_dirty_listener(self._mark)
+        cluster.add_op_listener(self._journal.append)
+
+    def _mark(self, node: int) -> None:
+        self._dirty.add(node)
+        self._marks[node] = self._marks.get(node, 0) + 1
 
     def refresh(self) -> None:
-        """Re-derive every dirty row from the live cluster state."""
-        for node in self._dirty:
+        """Bring every dirty row up to date.
+
+        Rows whose dirt is fully explained by the op journal are replayed
+        in ONE vectorized numpy merge (`_replay_journal`) — a ``plan()``
+        after a burst of commits costs O(dirty rows) numpy instead of an
+        `encode_row` python loop (victim sort + instance-list scan per
+        row).  The rest fall back to `refresh_row`."""
+        if not self._dirty:
+            self._journal.clear()
+            self._marks.clear()
+            return
+        for node in self._replay_journal():
             self.refresh_row(node, self.cluster)
         self._dirty.clear()
+        self._journal.clear()
+        self._marks.clear()
+
+    #: replay gate: a single row accumulating more preemptible additions
+    #: than this between refreshes re-encodes instead (bounds the merge
+    #: scratch width)
+    MAX_REPLAY_ADDS = 64
+
+    def _replay_journal(self) -> set[int]:
+        """Vectorized journal replay over the replay-safe dirty rows.
+        Returns the rows that still need a full `encode_row` rebuild."""
+        ops_by_node: dict[int, list[tuple]] = {}
+        for op in self._journal:
+            ops_by_node.setdefault(op[0], []).append(op)
+        bad: set[int] = set()
+        rows: list[int] = []
+        descs: list[tuple] = []     # (keep bool[cap], adds list)
+        max_adds = 1
+        for node in self._dirty:
+            ops = ops_by_node.get(node, ())
+            if (node in self._fresh or self.overflow[node]
+                    or self._marks.get(node, 0) != len(ops)):
+                bad.add(node)
+                continue
+            # net out the ops: a bind+evict (or evict+restore) of the same
+            # uid inside one window cancels exactly
+            present: dict[int, tuple] = {}
+            removed: set[int] = set()
+            fg, fc = int(self.free_gpu[node]), int(self.free_cg[node])
+            ok = True
+            for _, delta, gm, cm, prio, uid, preempt in ops:
+                if delta > 0:
+                    fg &= ~gm
+                    fc &= ~cm
+                    if preempt:
+                        if uid in removed:
+                            # evict -> restore cancels: the victim never
+                            # left the base row
+                            removed.discard(uid)
+                        else:
+                            present[uid] = (prio, uid, gm, cm)
+                else:
+                    fg |= gm
+                    fc |= cm
+                    if preempt:
+                        if uid in present:
+                            del present[uid]
+                        else:
+                            removed.add(uid)
+            if removed:
+                slot_uids = self.vu[node][self.stored[node]]
+                if not removed.issubset(set(int(u) for u in slot_uids)):
+                    ok = False      # removal outside the stored prefix
+            adds = sorted(present.values())
+            if not ok or len(adds) > self.MAX_REPLAY_ADDS:
+                bad.add(node)
+                continue
+            keep = self.stored[node] & ~np.isin(
+                self.vu[node], np.fromiter(removed, np.int64, len(removed)))
+            rows.append(node)
+            descs.append((fg, fc, keep, adds))
+            max_adds = max(max_adds, len(adds))
+        if rows:
+            self._replay_rows(rows, descs, max_adds)
+        return bad
+
+    def _replay_rows(self, rows: list[int], descs: list[tuple],
+                     a: int) -> None:
+        """One batched (priority, uid) lexsort merge for all replayed rows:
+        surviving base victims + net-new additions, exact int64 uids."""
+        cap, r = self.cap, len(rows)
+        idx = np.asarray(rows, np.int64)
+        s = cap + a
+        prio = np.full((r, s), 2**31 - 1, np.int32)
+        uid = np.full((r, s), np.iinfo(np.int64).max, np.int64)
+        gm = np.zeros((r, s), np.int32)
+        cm = np.zeros((r, s), np.int32)
+        valid = np.zeros((r, s), bool)
+        fg = np.zeros(r, np.int32)
+        fc = np.zeros(r, np.int32)
+        for i, (node, (nfg, nfc, keep, adds)) in enumerate(zip(rows, descs)):
+            fg[i], fc[i] = nfg, nfc
+            valid[i, :cap] = keep
+            prio[i, :cap][keep] = self.vp[node][keep]
+            uid[i, :cap][keep] = self.vu[node][keep]
+            gm[i, :cap][keep] = self.vg[node][keep]
+            cm[i, :cap][keep] = self.vc[node][keep]
+            for j, (p_, u_, g_, c_) in enumerate(adds):
+                prio[i, cap + j] = p_
+                uid[i, cap + j] = u_
+                gm[i, cap + j] = g_
+                cm[i, cap + j] = c_
+                valid[i, cap + j] = True
+        order = np.lexsort((uid, prio), axis=-1)
+        take = np.take_along_axis
+        sv = take(valid, order, 1)
+        sp = take(prio, order, 1)
+        su = take(uid, order, 1)
+        count = valid.sum(axis=1).astype(np.int32)
+        overflow = count > cap
+        self.free_gpu[idx] = fg
+        self.free_cg[idx] = fc
+        self.count[idx] = count
+        self.overflow[idx] = overflow
+        self.next_prio[idx] = np.where(overflow, sp[:, cap], 2**31 - 1)
+        st = sv[:, :cap]
+        self.stored[idx] = st
+        self.vg[idx] = np.where(st, take(gm, order, 1)[:, :cap], 0)
+        self.vc[idx] = np.where(st, take(cm, order, 1)[:, :cap], 0)
+        self.vp[idx] = np.where(st, sp[:, :cap], 0)
+        self.vu[idx] = np.where(st, su[:, :cap], 0)
+        ukey = np.where(st, su[:, :cap], np.iinfo(np.int64).max)
+        rank = np.argsort(np.argsort(ukey, axis=1, kind="stable"), axis=1)
+        self.rank[idx] = np.where(st, rank, 0)
 
     def refresh_row(self, node: int, source) -> None:
         """Fill one row from ``source`` (the base cluster or a ClusterView)."""
+        self._fresh.discard(node)
         row = encode_row(source, node, self.cap)
         self.free_gpu[node] = row.free_gpu
         self.free_cg[node] = row.free_cg
@@ -445,8 +621,19 @@ DRAIN_FIELDS = 2
 IDX_SENTINEL = 2**31 - 1
 
 #: largest dirty set ``sync(flush=False)`` may leave pending for
-#: in-dispatch overlay before forcing a real scatter
+#: in-dispatch overlay before forcing a real scatter (floor — see
+#: `max_pending_rows` for the node-count-scaled cap)
 MAX_PENDING_ROWS = 16
+
+
+def max_pending_rows(num_nodes: int) -> int:
+    """Node-count-scaled pending-overlay cap (power of two).
+
+    A fixed 16-row cap forces a full-flush scatter after almost every
+    commit burst at 10k nodes; scaling the cap with the node axis (~n/64,
+    clamped to [`MAX_PENDING_ROWS`, 1024]) keeps overlay uploads amortized
+    while the pow2 bucketing still bounds the jit-cache key space."""
+    return max(MAX_PENDING_ROWS, min(1024, _pad_pow2(max(1, num_nodes // 64))))
 
 
 def pack_rows(rows: list[VictimRow], node_ids, cap: int):
@@ -565,6 +752,259 @@ def pad_idx(ids, floor: int = 1) -> np.ndarray:
     return out
 
 
+# ---------------------------------------------------------------------------------
+# Device-side view-delta encoder
+# ---------------------------------------------------------------------------------
+
+def encode_delta_core(nodestate, victims, didx, rem, fog, foc, og, oc,
+                      addg, addc, addp, addv, *, cap: int, a: int):
+    """Traced twin of ``pack_rows([encode_row(view, node, cap), ...])``.
+
+    Instead of re-encoding each view-delta node's row on the host (victim
+    sort + O(delta) ``free_masks`` overlay per node, then a python pack
+    loop), the planned evictions/binds travel as tiny per-node descriptors
+    and the patch rows are rebuilt ON DEVICE from the resident base rows:
+
+    * gather the base row by ``didx`` (`IDX_SENTINEL` pads gather zeros),
+    * drop removed base victims (``rem`` slot bitmask), apply the freed /
+      newly-occupied mask deltas (``fog``/``foc`` | base, ``& ~og``/``oc``),
+    * merge up to ``a`` net-new victims (``add*``, pre-sorted by uid
+      ascending — planned binds carry NEGATIVE virtual uids, so every add
+      orders before every base victim) via a two-pass stable argsort on
+      ``(priority, uid-order)``, which reproduces ``encode_row``'s
+      ``(priority, uid)`` victim sort bit-exactly without int64 uids ever
+      touching the device.
+
+    Returns the flattened patch buffer ``int32[D, NODE_FIELDS +
+    VICTIM_FIELDS*cap + DRAIN_FIELDS]`` ready for the fused evaluators'
+    in-dispatch overlay (`apply_rows`) — the rows never round-trip through
+    python.  Rows whose merge could truncate (base overflow, > ``cap``
+    final victims, > ``a`` adds) are host-encoded by the caller instead.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    big = jnp.int32(2**31 - 1)
+    ns = jnp.take(nodestate, didx, axis=1, mode="fill", fill_value=0)
+    vv = jnp.take(victims, didx, axis=1, mode="fill", fill_value=0)
+    fg = (ns[NS_FREE_GPU] | fog) & ~og
+    fc = (ns[NS_FREE_CG] | foc) & ~oc
+    slot = jnp.arange(cap, dtype=jnp.int32)
+    keep = (vv[VF_STORED] != 0) & (((rem[:, None] >> slot[None, :]) & 1) == 0)
+    mg = jnp.concatenate([vv[VF_GPU], addg], axis=1)
+    mc = jnp.concatenate([vv[VF_CG], addc], axis=1)
+    mp = jnp.concatenate([vv[VF_PRIO], addp], axis=1)
+    d = didx.shape[0]
+    akey = jnp.broadcast_to(jnp.arange(a, dtype=jnp.int32)[None, :], (d, a))
+    mkey = jnp.concatenate([a + vv[VF_RANK], akey], axis=1)
+    mvalid = jnp.concatenate([keep, addv != 0], axis=1)
+    # two stable argsorts = one (priority, uid-order) lexsort
+    o1 = jnp.argsort(jnp.where(mvalid, mkey, big), axis=1)
+    p1 = jnp.where(jnp.take_along_axis(mvalid, o1, axis=1),
+                   jnp.take_along_axis(mp, o1, axis=1), big)
+    order = jnp.take_along_axis(o1, jnp.argsort(p1, axis=1), axis=1)
+
+    def srt(x):
+        return jnp.take_along_axis(x, order, axis=1)[:, :cap]
+
+    st = srt(mvalid)
+    sti = st.astype(jnp.int32)
+    vg = jnp.where(st, srt(mg), 0)
+    vc = jnp.where(st, srt(mc), 0)
+    vp = jnp.where(st, srt(mp), 0)
+    skey = jnp.where(st, srt(mkey), big)
+    rnk = jnp.sum((skey[:, None, :] < skey[:, :, None]) & st[:, None, :],
+                  axis=2, dtype=jnp.int32)
+    rank = jnp.where(st, rnk, 0)
+    new_ns = jnp.stack([fg, fc, didx,
+                        jnp.zeros_like(fg), jnp.full_like(fg, big)])
+    drg = fg | jax.lax.reduce(vg, np.int32(0), jax.lax.bitwise_or, (1,))
+    drc = fc | jax.lax.reduce(vc, np.int32(0), jax.lax.bitwise_or, (1,))
+    new_v = jnp.stack([vg, vc, vp, rank, sti])
+    new_dr = jnp.stack([drg, drc])
+    return jnp.concatenate(
+        [new_ns.T, new_v.transpose(1, 0, 2).reshape(d, -1), new_dr.T], axis=1)
+
+
+_DELTA_ENCODERS: dict = {}
+
+
+def delta_encoder(cap: int, a: int):
+    """Jitted `encode_delta_core` keyed by (victim cap, add bucket); the
+    descriptor length ``D`` stays dynamic (pow2-padded by the caller), so
+    variants are bounded by the few (cap, a) combinations in play."""
+    key = (cap, a)
+    fn = _DELTA_ENCODERS.get(key)
+    if fn is None:
+        import functools
+
+        import jax
+
+        fn = jax.jit(functools.partial(encode_delta_core, cap=cap, a=a))
+        _DELTA_ENCODERS[key] = fn
+    return fn
+
+
+class ViewDelta:
+    """Per-plan descriptor set for the device-side delta encoder.
+
+    Built once per fused ``plan()`` from the `ClusterView`'s planned
+    evictions/binds (O(delta instances) host work, no per-node victim
+    sort): nodes whose patch row the device can rebuild exactly carry tiny
+    descriptor columns (`device_rows` feeds them to `delta_encoder`);
+    nodes behind a replay gate — resident row still pending-stale, base
+    row truncated, more than ``a_max`` adds, or a post-merge victim count
+    above ``cap`` — fall back to host `encode_row` (the ``fallback``
+    dict).  Winner uid decode stays lazy and host-side: `row(node)`
+    encodes ONE node on demand (uids are int64 and never on device).
+    """
+
+    def __init__(self, view, ctx: "SourcingContext", pending,
+                 a_max: int = 8) -> None:
+        self.view = view
+        self.cap = cap = ctx.cap
+        self.fallback: dict[int, VictimRow] = {}
+        self._rows: dict[int, VictimRow] = {}
+        dense: list[int] = []
+        descs: list[tuple] = []
+        max_adds = 1
+        per: dict[int, list] = {}
+        for inst in view._evicted.values():
+            per.setdefault(inst.node, []).append((False, inst))
+        for inst in view._added.values():
+            per.setdefault(inst.node, []).append((True, inst))
+        for node, insts in per.items():
+            bad = (node in pending or bool(ctx.overflow[node])
+                   or node in ctx._fresh)
+            fog = foc = og = oc = 0
+            removed: set[int] = set()
+            adds: list[tuple] = []
+            for is_add, inst in insts:
+                if is_add:
+                    og |= inst.gpu_mask
+                    oc |= inst.cg_mask
+                    if inst.preemptible:
+                        adds.append((inst.uid, inst.priority,
+                                     inst.gpu_mask, inst.cg_mask))
+                else:
+                    fog |= inst.gpu_mask
+                    foc |= inst.cg_mask
+                    if inst.preemptible:
+                        removed.add(inst.uid)
+            keep = ctx.stored[node] & ~np.isin(
+                ctx.vu[node], np.fromiter(removed, np.int64, len(removed)))
+            count = int(keep.sum()) + len(adds)
+            if bad or len(adds) > a_max or count > cap:
+                self.fallback[node] = self.row(node)
+                continue
+            rem = int(np.bitwise_or.reduce(
+                np.where(ctx.stored[node] & ~keep, 1 << np.arange(cap), 0)))
+            adds.sort()     # uid ascending == global (priority, uid) prep
+            dense.append(node)
+            descs.append((rem, fog, foc, og, oc, adds, keep))
+            max_adds = max(max_adds, len(adds))
+        self.a = _pad_pow2(max_adds)
+        d = len(dense)
+        self.dense = np.asarray(dense, np.int32)
+        self.rem = np.zeros(d, np.int32)
+        self.fog = np.zeros(d, np.int32)
+        self.foc = np.zeros(d, np.int32)
+        self.og = np.zeros(d, np.int32)
+        self.oc = np.zeros(d, np.int32)
+        self.addg = np.zeros((d, self.a), np.int32)
+        self.addc = np.zeros((d, self.a), np.int32)
+        self.addp = np.zeros((d, self.a), np.int32)
+        self.addv = np.zeros((d, self.a), np.int32)
+        # host routing metadata (no device round-trip): surviving base
+        # priorities + add priorities per dense node
+        self._vp = np.full((d, cap), 2**31 - 1, np.int32)
+        self._count = np.zeros(d, np.int32)
+        for i, (node, (rem, fog, foc, og, oc, adds, keep)) in enumerate(
+                zip(dense, descs)):
+            self.rem[i] = rem
+            self.fog[i], self.foc[i] = fog, foc
+            self.og[i], self.oc[i] = og, oc
+            for j, (_, prio, gm, cm) in enumerate(adds):
+                self.addg[i, j] = gm
+                self.addc[i, j] = cm
+                self.addp[i, j] = prio
+                self.addv[i, j] = 1
+            self._vp[i][keep] = ctx.vp[node][keep]
+            self._count[i] = keep.sum() + len(adds)
+        self._addp_m = np.where(self.addv != 0, self.addp, 2**31 - 1)
+        self._pos = {int(n): i for i, n in enumerate(dense)}
+
+    # -- container interface (the delta-node set) ---------------------------------
+    def __len__(self) -> int:
+        return len(self._pos) + len(self.fallback)
+
+    def __contains__(self, node: int) -> bool:
+        return node in self._pos or node in self.fallback
+
+    def __iter__(self):
+        yield from self._pos
+        yield from self.fallback
+
+    # -- host routing metadata ----------------------------------------------------
+    def elig_bad(self, thresh: int):
+        """Per delta node: eligible stored victims under ``thresh`` and
+        whether truncation could hide eligible victims (dense rows never
+        truncate by construction)."""
+        elig = {node: int(((row.vp < thresh) & row.stored).sum())
+                for node, row in self.fallback.items()}
+        bad = {node: bool(row.overflow) and row.next_priority < thresh
+               for node, row in self.fallback.items()}
+        if len(self._pos):
+            cnt = ((self._vp < thresh).sum(axis=1)
+                   + (self._addp_m < thresh).sum(axis=1))
+            for node, i in self._pos.items():
+                elig[node] = int(cnt[i])
+                bad[node] = False
+        return elig, bad
+
+    def count(self, node: int) -> int:
+        i = self._pos.get(node)
+        if i is not None:
+            return int(self._count[i])
+        return self.fallback[node].count
+
+    def row(self, node: int) -> VictimRow:
+        """Exact host row for one delta node (winner uid decode / wide
+        fallbacks) — lazy, cached, O(1) nodes per plan."""
+        row = self._rows.get(node)
+        if row is None:
+            row = self._rows[node] = encode_row(self.view, node, self.cap)
+        return row
+
+    # -- device path ---------------------------------------------------------------
+    def device_rows(self, dcs: "DeviceClusterState"):
+        """Encode every dense delta row on device: returns ``(didx
+        int32[Dp], buf int32[Dp, width])`` pow2-padded, buf still on
+        device.  Empty when all delta nodes fell back."""
+        import jax.numpy as jnp
+
+        d = len(self.dense)
+        if d == 0:
+            return None
+        didx = pad_idx(self.dense)
+        dp = len(didx)
+
+        def pad(x):
+            if len(x) == dp:
+                return x
+            width = ((0, dp - d),) + ((0, 0),) * (x.ndim - 1)
+            return np.pad(x, width)
+
+        buf = dcs.delta_encode(
+            self.a, jnp.asarray(didx),
+            jnp.asarray(pad(self.rem)), jnp.asarray(pad(self.fog)),
+            jnp.asarray(pad(self.foc)), jnp.asarray(pad(self.og)),
+            jnp.asarray(pad(self.oc)), jnp.asarray(pad(self.addg)),
+            jnp.asarray(pad(self.addc)), jnp.asarray(pad(self.addp)),
+            jnp.asarray(pad(self.addv)))
+        return didx, buf
+
+
 class DeviceClusterState:
     """Device-resident struct-of-arrays view of the cluster's sourcing state.
 
@@ -594,15 +1034,20 @@ class DeviceClusterState:
     evaluators overlay patch rows inside the dispatch (``pack_rows``).
     """
 
+    #: device mesh the stacked tensors are sharded over (None = single
+    #: device; `ShardedDeviceClusterState` overrides)
+    mesh = None
+
     def __init__(self, cluster: Cluster, cap: int | None = None) -> None:
         self.cluster = cluster
         self.mirror = cluster.sourcing_context()
         if cap is not None and cap != self.mirror.cap:
             raise ValueError("device cap must match the mirror's cap")
         self.cap = self.mirror.cap
-        self.nodestate = None   # jnp.int32[NODE_FIELDS, N]
-        self.victims = None     # jnp.int32[VICTIM_FIELDS, N, cap]
-        self.drain = None       # jnp.int32[DRAIN_FIELDS, N]
+        self.max_pending = max_pending_rows(cluster.num_nodes)
+        self.nodestate = None   # jnp.int32[NODE_FIELDS, n_rows]
+        self.victims = None     # jnp.int32[VICTIM_FIELDS, n_rows, cap]
+        self.drain = None       # jnp.int32[DRAIN_FIELDS, n_rows]
         #: host fast-path: when no node stores more than NARROW_M victims,
         #: per-plan wide/overflow routing is skipped entirely
         self.count_max = 0
@@ -633,28 +1078,50 @@ class DeviceClusterState:
         separate scatter dispatch on the plan hot path.  Large pending sets
         are flushed regardless so the overlay bucket stays small.
         """
-        import jax.numpy as jnp
-
         self.mirror.refresh()
         n = self.cluster.num_nodes
         if self.nodestate is None or 2 * len(self._dirty) >= max(n, 2):
             ns, v, dr = pack_context_rows(self.mirror, np.arange(n))
-            self.nodestate = jnp.asarray(ns)
-            self.victims = jnp.asarray(v)
-            self.drain = jnp.asarray(dr)
+            self.nodestate, self.victims, self.drain = self._upload_full(
+                ns, v, dr)
             self._dirty.clear()
-        elif self._dirty and (flush or len(self._dirty) > MAX_PENDING_ROWS):
+        elif self._dirty and (flush or len(self._dirty) > self.max_pending):
             rows = sorted(self._dirty)
             buf = flatten_rows(*pack_context_rows(self.mirror, rows))
             idx = pad_idx(rows)
             if len(idx) > len(rows):
                 buf = np.pad(buf, ((0, len(idx) - len(rows)), (0, 0)))
-            self.nodestate, self.victims, self.drain = _scatter_rows(
-                self.nodestate, self.victims, self.drain,
-                jnp.asarray(idx), jnp.asarray(buf))
+            self.nodestate, self.victims, self.drain = self._scatter(idx, buf)
             self._dirty.clear()
         self.count_max = int(self.mirror.count.max()) if n else 0
         return self
+
+    @property
+    def n_rows(self) -> int:
+        """Length of the device node axis (== ``num_nodes`` here; the
+        sharded subclass pads to a multiple of the device count)."""
+        return self.cluster.num_nodes
+
+    def _upload_full(self, ns, v, dr):
+        """Full-rebuild upload hook (subclasses re-layout/shard here)."""
+        import jax.numpy as jnp
+
+        return jnp.asarray(ns), jnp.asarray(v), jnp.asarray(dr)
+
+    def _scatter(self, idx, buf):
+        """Dirty-row scatter hook (subclasses keep the output sharded)."""
+        import jax.numpy as jnp
+
+        return _scatter_rows(self.nodestate, self.victims, self.drain,
+                             jnp.asarray(idx), jnp.asarray(buf))
+
+    def delta_encode(self, a: int, didx, *descs):
+        """Run the device-side view-delta encoder against the resident
+        base tensors (`ViewDelta.device_rows` feeds the descriptors).  The
+        sharded subclass overrides to pin the descriptor inputs and the
+        tiny patch-row output replicated across the mesh."""
+        return delta_encoder(self.cap, a)(self.nodestate, self.victims,
+                                          didx, *descs)
 
     @property
     def pending(self) -> set[int]:

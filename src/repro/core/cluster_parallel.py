@@ -7,23 +7,37 @@ slice of servers), and the Eq. 1/Eq. 2 argmax reduces globally — XLA lowers
 the reduction to all-reduce collectives across pods.  ``lower_distributed_source``
 is compiled by the multi-pod dry-run to prove the scheduler itself scales to
 the production mesh.
+
+The **``imp_sharded`` engine** goes beyond dry-run lowering: it installs a
+`ShardedDeviceClusterState` (the resident nodestate/victims/drain tensors
+`NamedSharding`-split on the node axis over a 1-D mesh of every local
+device) and routes the full fused dispatch chain — `preemption_jax`'s
+`plan_fused` / `plan_normal_fused` / `source_candidates_fused` / batch
+sessions, UNCHANGED — through `sharded_evaluators`: jits of the very same
+pipeline bodies with explicit sharding constraints.  Per-node filtering,
+subset sweeps and class reductions stay shard-local; only the final Eq. 2
+argmax chain (and the one-row winner gather) crosses shards.  Decisions are
+bit-identical to ``imp_batched`` (see tests/test_distributed.py).
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from .cluster import (DRAIN_FIELDS, NODE_FIELDS, NS_FREE_CG, NS_FREE_GPU,
-                      NS_NODE_ID, VF_CG, VF_GPU, VICTIM_FIELDS)
+from .cluster import (DRAIN_FIELDS, IDX_SENTINEL, NODE_FIELDS, NS_FREE_CG,
+                      NS_FREE_GPU, NS_NODE_ID, VF_CG, VF_GPU, VICTIM_FIELDS,
+                      DeviceClusterState, apply_rows, encode_delta_core)
+from .engines import register_engine
 from .placement_jax import normal_cycle_core, winner_place
 from .preemption_jax import (Request, _evaluate_subsets_core,
                              _fused_argmax_core, _fused_class_core,
-                             combo_table, spec_constants)
-from .scoring import TIER_SCORES
+                             _sorting_winner, combo_table, spec_constants)
+from . import preemption_jax as _pj
+from .scoring import DEFAULT_ALPHA, TIER_SCORES
 from .topology import ServerSpec
 
 _TIER_VALUES = tuple(TIER_SCORES) + (0.0,)
@@ -151,17 +165,14 @@ def make_distributed_fused_source(
     repl = NamedSharding(mesh, P())
 
     def fn(nodestate, victims, drain, thresh):
-        ng = jnp.int32(request.need_gpus)
-        nc = jnp.int32(request.need_cgs)
-        cpb = jnp.int32(request.cgs_per_bundle)
-        cls = _fused_class_core(
-            nodestate, victims, drain, thresh, ng, nc, cpb,
-            jnp.float32(alpha), spec=spec, m=m, narrow_gate=True)
-        win = _fused_argmax_core(nodestate[NS_NODE_ID], cls,
-                                 jnp.float32(alpha))
-        return winner_place(win, nodestate[NS_FREE_GPU],
-                            nodestate[NS_FREE_CG], victims[VF_GPU],
-                            victims[VF_CG], ng, nc, cpb, spec=spec)
+        # the SAME body the local fused engine dispatches (g=0: no
+        # gathered mid-tier section) — `sharded_evaluators` jits the full
+        # overlay/plan variants of it for the `imp_sharded` engine
+        return _sorting_winner(
+            nodestate, victims, drain, jnp.zeros(0, jnp.int32), thresh,
+            jnp.int32(request.need_gpus), jnp.int32(request.need_cgs),
+            jnp.int32(request.cgs_per_bundle), jnp.float32(alpha),
+            spec=spec, m=m, g=0)
 
     return jax.jit(
         fn,
@@ -251,3 +262,296 @@ def lower_distributed_fused_source(
     shapes = [jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype)
               for a in args]
     return fn.lower(*shapes)
+
+
+# ---------------------------------------------------------------------------------
+# Mesh-sharded resident cluster state (the `imp_sharded` engine)
+# ---------------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _cluster_mesh(devices) -> jax.sharding.Mesh:
+    return jax.sharding.Mesh(np.asarray(devices), ("nodes",))
+
+
+def cluster_mesh(devices=None) -> jax.sharding.Mesh:
+    """1-D mesh over every local device (axis ``nodes``) — the default
+    layout of `ShardedDeviceClusterState`.  Degrades to a one-device mesh
+    when only one device exists, so the sharded paths stay parity-testable
+    anywhere."""
+    return _cluster_mesh(tuple(jax.devices()) if devices is None
+                         else tuple(devices))
+
+
+@lru_cache(maxsize=None)
+def _mesh_shardings(mesh):
+    """(node, victim, replicated) `NamedSharding`s of a mesh: node-axis
+    tensors split their axis 1 over EVERY mesh axis."""
+    axes = tuple(mesh.axis_names)
+    return (NamedSharding(mesh, P(None, axes)),
+            NamedSharding(mesh, P(None, axes, None)),
+            NamedSharding(mesh, P()))
+
+
+@lru_cache(maxsize=None)
+def _sharded_scatter(mesh):
+    """jit of the dirty-row scatter with the resident tensors held sharded
+    on both sides (the update rows replicate — they are O(dirty), tiny)."""
+    node_sh, victim_sh, repl = _mesh_shardings(mesh)
+    return jax.jit(apply_rows,
+                   in_shardings=(node_sh, victim_sh, node_sh, repl, repl),
+                   out_shardings=(node_sh, victim_sh, node_sh))
+
+
+@lru_cache(maxsize=None)
+def _sharded_delta_encoder(mesh, cap: int, a: int):
+    """jit of `cluster.encode_delta_core` against the SHARDED base tensors:
+    the per-plan descriptor columns arrive replicated and the rebuilt patch
+    rows come back replicated (they are O(delta), tiny), so the base-row
+    gather is the only cross-shard traffic."""
+    node_sh, victim_sh, repl = _mesh_shardings(mesh)
+    return jax.jit(partial(encode_delta_core, cap=cap, a=a),
+                   in_shardings=(node_sh, victim_sh) + (repl,) * 10,
+                   out_shardings=repl)
+
+
+class ShardedDeviceClusterState(DeviceClusterState):
+    """`DeviceClusterState` with the node axis `NamedSharding`-split over a
+    device mesh (install via ``cluster.device_state(sharded=True)``).
+
+    The node axis is padded UP to a multiple of the device count; pad rows
+    carry `IDX_SENTINEL` node ids and zero masks, which every fused core
+    already excludes (``node_ids < 2**31-1`` screens), so evaluator
+    results are bit-identical to the unsharded layout.  ``n_rows`` exposes
+    the padded length — the fused paths use it as the row base of their
+    gathered sections.  The full-rebuild upload, the dirty-row scatter and
+    the view-delta encoder all pin their outputs sharded/replicated
+    explicitly so the resident tensors never silently migrate."""
+
+    def __init__(self, cluster, cap: int | None = None, mesh=None) -> None:
+        self.mesh = cluster_mesh() if mesh is None else mesh
+        self._node_sh, self._victim_sh, self._repl = _mesh_shardings(
+            self.mesh)
+        super().__init__(cluster, cap)
+
+    @property
+    def n_rows(self) -> int:
+        d = int(self.mesh.size)
+        return -(-max(self.cluster.num_nodes, 1) // d) * d
+
+    def _upload_full(self, ns, v, dr):
+        pad = self.n_rows - ns.shape[1]
+        if pad:
+            pns = np.zeros((NODE_FIELDS, pad), np.int32)
+            pns[NS_NODE_ID] = IDX_SENTINEL
+            ns = np.concatenate([ns, pns], axis=1)
+            v = np.concatenate(
+                [v, np.zeros((VICTIM_FIELDS, pad, v.shape[2]), np.int32)],
+                axis=1)
+            dr = np.concatenate(
+                [dr, np.zeros((DRAIN_FIELDS, pad), np.int32)], axis=1)
+        return (jax.device_put(np.ascontiguousarray(ns), self._node_sh),
+                jax.device_put(np.ascontiguousarray(v), self._victim_sh),
+                jax.device_put(np.ascontiguousarray(dr), self._node_sh))
+
+    def _scatter(self, idx, buf):
+        return _sharded_scatter(self.mesh)(
+            self.nodestate, self.victims, self.drain,
+            jnp.asarray(idx), jnp.asarray(buf))
+
+    def delta_encode(self, a: int, didx, *descs):
+        return _sharded_delta_encoder(self.mesh, self.cap, a)(
+            self.nodestate, self.victims, didx, *descs)
+
+
+# ---------------------------------------------------------------------------------
+# Sharded twins of the fused evaluator factories
+# ---------------------------------------------------------------------------------
+
+class _ShardedEvaluators:
+    """Drop-in namespace for `preemption_jax._evals`: the SAME pipeline
+    bodies (`_plan_pipeline`, `_plan2_pipeline`, `_normal_pipeline`,
+    `_gathered_pipeline`, the batch pipelines) jitted with explicit
+    sharding constraints.  Node-axis tensors arrive sharded, every
+    aux/patch upload and the request scalars replicate, and the
+    int32[`WIN_FIELDS`]-sized winner vectors come back replicated — the
+    per-node class math runs shard-local and only the final argmax chain
+    (plus the winner-row gather) crosses shards as collectives."""
+
+    def __init__(self, mesh) -> None:
+        self.mesh = mesh
+        self.node_sh, self.victim_sh, self.repl = _mesh_shardings(mesh)
+        self._cache: dict = {}
+
+    def _get(self, key, build):
+        fn = self._cache.get(key)
+        if fn is None:
+            fn = self._cache[key] = build()
+        return fn
+
+    def resident_evaluator(self, spec, m, p, g, thresh, ng, nc, cpb,
+                           alpha):
+        def build():
+            def f(nodestate, victims, drain, aux, pbuf):
+                return _pj._plan_pipeline(
+                    nodestate, victims, drain, aux, pbuf, thresh, ng, nc,
+                    cpb, alpha, spec=spec, m=m, p=p, g=g)
+
+            return jax.jit(f, in_shardings=(
+                self.node_sh, self.victim_sh, self.node_sh, self.repl,
+                self.repl), out_shardings=self.repl)
+
+        return self._get(("res", spec, m, p, g, thresh, ng, nc, cpb,
+                          alpha), build)
+
+    def plan_evaluator(self, spec, m, p, g, thresh, ng, nc, cpb, alpha):
+        def build():
+            def f(nodestate, victims, drain, aux, pbuf):
+                return _pj._plan2_pipeline(
+                    nodestate, victims, drain, aux, pbuf, thresh, ng, nc,
+                    cpb, alpha, spec=spec, m=m, p=p, g=g)
+
+            return jax.jit(f, in_shardings=(
+                self.node_sh, self.victim_sh, self.node_sh, self.repl,
+                self.repl), out_shardings=self.repl)
+
+        return self._get(("plan", spec, m, p, g, thresh, ng, nc, cpb,
+                          alpha), build)
+
+    def normal_evaluator(self, spec, p, ng, nc, cpb):
+        def build():
+            def f(nodestate, aux, pbuf):
+                return _pj._normal_pipeline(nodestate, aux, pbuf, ng, nc,
+                                            cpb, spec=spec, p=p)
+
+            return jax.jit(f, in_shardings=(
+                self.node_sh, self.repl, self.repl),
+                out_shardings=self.repl)
+
+        return self._get(("norm", spec, p, ng, nc, cpb), build)
+
+    def gathered_evaluator(self, spec, m, p, thresh, ng, nc, cpb, alpha):
+        def build():
+            def f(nodestate, victims, drain, pidx, pbuf, gidx):
+                return _pj._gathered_pipeline(
+                    nodestate, victims, drain, pidx, pbuf, gidx, thresh,
+                    ng, nc, cpb, alpha, spec=spec, m=m, p=p)
+
+            return jax.jit(f, in_shardings=(
+                self.node_sh, self.victim_sh, self.node_sh, self.repl,
+                self.repl, self.repl), out_shardings=self.repl)
+
+        return self._get(("gath", spec, m, p, thresh, ng, nc, cpb, alpha),
+                         build)
+
+    def batch_class_evaluator(self, spec, m, alpha):
+        def build():
+            def f(nodestate, victims, drain, thresh, ng, nc, cpb):
+                return _fused_class_core(
+                    nodestate, victims, drain, thresh, ng, nc, cpb, alpha,
+                    spec=spec, m=m, narrow_gate=True)
+
+            cw3, cw2 = self.victim_sh, self.node_sh
+            return jax.jit(
+                jax.vmap(f, in_axes=(None, None, None, 0, 0, 0, 0)),
+                in_shardings=(self.node_sh, self.victim_sh, self.node_sh)
+                + (self.repl,) * 4,
+                out_shardings=_pj.ClassWinners(cw3, cw3, cw3, cw3, cw2,
+                                               cw2))
+
+        return self._get(("bcls", spec, m, alpha), build)
+
+    def batch_merge_evaluator(self, spec, m, dpad, g, thresh, ng, nc, cpb,
+                              alpha):
+        def build():
+            def f(anyc, cb, pp, um, kn, cnt, nodestate, victims, drain, i,
+                  aux, pbuf):
+                return _pj._batch_merge_pipeline(
+                    anyc, cb, pp, um, kn, cnt, nodestate, victims, drain,
+                    i, aux, pbuf, thresh, ng, nc, cpb, alpha, spec=spec,
+                    m=m, dpad=dpad, g=g)
+
+            cw3, cw2 = self.victim_sh, self.node_sh
+            return jax.jit(f, in_shardings=(
+                cw3, cw3, cw3, cw3, cw2, cw2, self.node_sh, self.victim_sh,
+                self.node_sh, self.repl, self.repl, self.repl),
+                out_shardings=self.repl)
+
+        return self._get(("bmerge", spec, m, dpad, g, thresh, ng, nc, cpb,
+                          alpha), build)
+
+    def batch_plan_evaluator(self, spec, m, dpad, g, p, thresh, ng, nc,
+                             cpb, alpha):
+        def build():
+            def f(anyc, cb, pp, um, kn, cnt, nodestate, victims, drain, i,
+                  aux, pbuf):
+                return _pj._batch_plan_pipeline(
+                    anyc, cb, pp, um, kn, cnt, nodestate, victims, drain,
+                    i, aux, pbuf, thresh, ng, nc, cpb, alpha, spec=spec,
+                    m=m, dpad=dpad, g=g, p=p)
+
+            cw3, cw2 = self.victim_sh, self.node_sh
+            return jax.jit(f, in_shardings=(
+                cw3, cw3, cw3, cw3, cw2, cw2, self.node_sh, self.victim_sh,
+                self.node_sh, self.repl, self.repl, self.repl),
+                out_shardings=self.repl)
+
+        return self._get(("bplan", spec, m, dpad, g, p, thresh, ng, nc,
+                          cpb, alpha), build)
+
+
+@lru_cache(maxsize=None)
+def sharded_evaluators(mesh) -> _ShardedEvaluators:
+    """The per-mesh sharded evaluator namespace (`preemption_jax._evals`
+    routes here whenever the device state carries a mesh)."""
+    return _ShardedEvaluators(mesh)
+
+
+# ---------------------------------------------------------------------------------
+# The `imp_sharded` engine: fused paths over the sharded resident state
+# ---------------------------------------------------------------------------------
+
+def _sharded_state(cluster) -> None:
+    """Idempotently install the mesh-sharded device state on the base
+    cluster: every fused path then routes through `sharded_evaluators`."""
+    base = getattr(cluster, "base", cluster)
+    base.device_state(sharded=True)
+
+
+def plan_sharded(cluster, workload, alpha: float = DEFAULT_ALPHA,
+                 allow_preempt: bool = True):
+    """`preemption_jax.plan_fused` over the sharded resident state."""
+    _sharded_state(cluster)
+    return _pj.plan_fused(cluster, workload, alpha, allow_preempt)
+
+
+def plan_normal_sharded(cluster, workload):
+    """`preemption_jax.plan_normal_fused` over the sharded state."""
+    _sharded_state(cluster)
+    return _pj.plan_normal_fused(cluster, workload)
+
+
+def batch_session_sharded(cluster, workloads, alpha: float):
+    """`preemption_jax.persistent_batch_session` over the sharded state."""
+    _sharded_state(cluster)
+    return _pj.persistent_batch_session(cluster, workloads, alpha)
+
+
+def warmup_sharded(cluster, alpha: float = DEFAULT_ALPHA, batch: int = 8,
+                   workloads=None) -> None:
+    """`preemption_jax.warmup_fused` against the sharded jit variants."""
+    _sharded_state(cluster)
+    _pj.warmup_fused(cluster, alpha, batch, workloads)
+
+
+@register_engine("imp_sharded", batched=True, needs_alpha=True,
+                 fused_filter=True, fused_place=True, plan_fn=plan_sharded,
+                 normal_fn=plan_normal_sharded,
+                 batch_factory=batch_session_sharded,
+                 warmup_fn=warmup_sharded)
+def source_candidates_sharded(cluster, workload, nodes=None,
+                              alpha: float = DEFAULT_ALPHA):
+    """``imp_batched`` semantics, mesh-sharded state: same fused dispatch
+    chain, node axis split across every local device."""
+    _sharded_state(cluster)
+    return _pj.source_candidates_fused(cluster, workload, nodes,
+                                       alpha=alpha)

@@ -159,6 +159,7 @@ _REGISTRY: dict[str, SourcingEngine] = {}
 # import graph: the Pallas kernel pulls in jax.experimental.pallas).
 _LAZY: dict[str, str] = {
     "imp_pallas": "repro.kernels.topo_score",
+    "imp_sharded": "repro.core.cluster_parallel",
 }
 
 

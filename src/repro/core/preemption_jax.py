@@ -48,6 +48,7 @@ Tier convention matches ``placement.best_tier``:
 from __future__ import annotations
 
 import dataclasses
+import sys
 from functools import lru_cache, partial
 from typing import NamedTuple
 
@@ -59,9 +60,9 @@ from .cluster import (DRAIN_FIELDS, IDX_SENTINEL, MAX_DENSE_VICTIMS,
                       NODE_FIELDS, NS_FREE_CG, NS_FREE_GPU, NS_NEXT_PRIO,
                       NS_NODE_ID, NS_OVERFLOW, VF_CG, VF_GPU, VF_PRIO,
                       VF_RANK, VF_STORED, VICTIM_FIELDS, Cluster,
-                      DeviceClusterState, VictimRow, _pad_pow2, apply_rows,
-                      encode_row, flatten_rows, pack_context_rows, pack_rows,
-                      pad_idx, unflatten_rows)
+                      DeviceClusterState, VictimRow, ViewDelta, _pad_pow2,
+                      apply_rows, encode_row, flatten_rows,
+                      pack_context_rows, pack_rows, pad_idx, unflatten_rows)
 from .engines import register_engine
 from .placement import Placement
 from .placement_jax import (normal_cycle_core, spec_constants,
@@ -748,44 +749,58 @@ def plan_evaluator(spec: ServerSpec, m: int, p: int, g: int,
     return jax.jit(f)
 
 
+def _normal_pipeline(nodestate, aux, pbuf, ng, nc, cpb, *, spec, p):
+    """Nodestate-only patch overlay + the normal-cycle scorer."""
+    if p:
+        nodestate = _overlay_ns(nodestate, aux[:p], pbuf)
+    return normal_cycle_core(nodestate, ng, nc, cpb, spec=spec)
+
+
 @lru_cache(maxsize=None)
 def normal_evaluator(spec: ServerSpec, p: int, ng: int, nc: int, cpb: int):
-    """jit: nodestate-only patch overlay + the normal-cycle scorer.
+    """jit of `_normal_pipeline`.
 
     The batch sessions use this as their per-plan normal cycle (one small
     [NODE_FIELDS, N] dispatch instead of the host python node loop)."""
 
     def f(nodestate, aux, pbuf):
-        if p:
-            nodestate = _overlay_ns(nodestate, aux[:p], pbuf)
-        return normal_cycle_core(nodestate, ng, nc, cpb, spec=spec)
+        return _normal_pipeline(nodestate, aux, pbuf, ng, nc, cpb,
+                                spec=spec, p=p)
 
     return jax.jit(f)
+
+
+def _gathered_pipeline(nodestate, victims, drain, pidx, pbuf, gidx,
+                       thresh, ng, nc, cpb, alpha, *, spec, m, p):
+    """Patch overlay, then DEVICE-SIDE gather of the rows named by
+    ``gidx`` (wide nodes, or a batch plan's delta nodes) and the fused
+    pipeline over just those rows.  ``IDX_SENTINEL`` entries gather zero
+    rows whose sentinel node id can never win."""
+    if p:
+        nodestate, victims, drain = _overlay(nodestate, victims, drain,
+                                             pidx, pbuf)
+    ns = jnp.take(nodestate, gidx, axis=1, mode="fill", fill_value=0)
+    vv = jnp.take(victims, gidx, axis=1, mode="fill", fill_value=0)
+    dd = jnp.take(drain, gidx, axis=1, mode="fill", fill_value=0)
+    ns = ns.at[NS_NODE_ID].set(gidx)
+    cls = _fused_class_core(ns, vv, dd, thresh, ng, nc, cpb, alpha,
+                            spec=spec, m=m, narrow_gate=False)
+    win = _fused_argmax_core(ns[NS_NODE_ID], cls, alpha)
+    return winner_place(win, ns[NS_FREE_GPU], ns[NS_FREE_CG],
+                        vv[VF_GPU], vv[VF_CG], ng, nc, cpb, spec=spec)
 
 
 @lru_cache(maxsize=None)
 def gathered_evaluator(spec: ServerSpec, m: int, p: int,
                        thresh: int, ng: int, nc: int, cpb: int,
                        alpha: float):
-    """jit: patch overlay, then DEVICE-SIDE gather of the rows named by
-    ``gidx`` (wide nodes, or a batch plan's delta nodes) and the fused
-    pipeline over just those rows, request baked in as in
-    `resident_evaluator`.  ``IDX_SENTINEL`` entries gather zero rows whose
-    sentinel node id can never win."""
+    """jit of `_gathered_pipeline`, request baked in as in
+    `resident_evaluator`."""
 
     def f(nodestate, victims, drain, pidx, pbuf, gidx):
-        if p:
-            nodestate, victims, drain = _overlay(nodestate, victims, drain,
-                                                 pidx, pbuf)
-        ns = jnp.take(nodestate, gidx, axis=1, mode="fill", fill_value=0)
-        vv = jnp.take(victims, gidx, axis=1, mode="fill", fill_value=0)
-        dd = jnp.take(drain, gidx, axis=1, mode="fill", fill_value=0)
-        ns = ns.at[NS_NODE_ID].set(gidx)
-        cls = _fused_class_core(ns, vv, dd, thresh, ng, nc, cpb, alpha,
-                                spec=spec, m=m, narrow_gate=False)
-        win = _fused_argmax_core(ns[NS_NODE_ID], cls, alpha)
-        return winner_place(win, ns[NS_FREE_GPU], ns[NS_FREE_CG],
-                            vv[VF_GPU], vv[VF_CG], ng, nc, cpb, spec=spec)
+        return _gathered_pipeline(nodestate, victims, drain, pidx, pbuf,
+                                  gidx, thresh, ng, nc, cpb, alpha,
+                                  spec=spec, m=m, p=p)
 
     return jax.jit(f)
 
@@ -846,63 +861,84 @@ def _masked_class_winner(anyc, cb, pp, um, kn, cnt, nodestate, victims,
                         ng, nc, cpb, spec=spec)
 
 
+def _batch_merge_pipeline(anyc, cb, pp, um, kn, cnt, nodestate, victims,
+                          drain, i, aux, pbuf, thresh, ng, nc, cpb, alpha,
+                          *, spec, m, dpad, g):
+    """Patch overlay + `_masked_class_winner` (the batch merge body).
+
+    ``aux`` layout: ``[:dpad]`` mask rows, then the patch rows (``pbuf``
+    row order matches), then the gather rows."""
+    p = pbuf.shape[0]
+    if p:
+        nodestate, victims, drain = _overlay(nodestate, victims, drain,
+                                             aux[dpad:dpad + p], pbuf)
+    return _masked_class_winner(
+        anyc, cb, pp, um, kn, cnt, nodestate, victims, drain, i,
+        aux[:dpad], aux[dpad + p:], thresh, ng, nc, cpb, alpha,
+        spec=spec, m=m, g=g)
+
+
 @lru_cache(maxsize=None)
 def batch_merge_evaluator(spec: ServerSpec, m: int, dpad: int, g: int,
                           thresh: int, ng: int, nc: int, cpb: int,
                           alpha: float):
     """Per-request device merge for the batch session, ONE dispatch.
 
-    Overlays the patched delta rows, then `_masked_class_winner`: a
-    batched plan whose deltas are all narrow costs exactly one dispatch
-    and one int32[`WIN_FIELDS`] readback, like a single-request plan.
-    ``aux`` layout: ``[:dpad]`` mask rows, then the patch rows (``pbuf``
-    row order matches), then the gather rows."""
+    jit of `_batch_merge_pipeline`: a batched plan whose deltas are all
+    narrow costs exactly one dispatch and one int32[`WIN_FIELDS`]
+    readback, like a single-request plan."""
 
     def f(anyc, cb, pp, um, kn, cnt, nodestate, victims, drain, i, aux,
           pbuf):
-        p = pbuf.shape[0]
-        if p:
-            nodestate, victims, drain = _overlay(nodestate, victims, drain,
-                                                 aux[dpad:dpad + p], pbuf)
+        return _batch_merge_pipeline(
+            anyc, cb, pp, um, kn, cnt, nodestate, victims, drain, i, aux,
+            pbuf, thresh, ng, nc, cpb, alpha, spec=spec, m=m, dpad=dpad,
+            g=g)
+
+    return jax.jit(f)
+
+
+def _batch_plan_pipeline(anyc, cb, pp, um, kn, cnt, nodestate, victims,
+                         drain, i, aux, pbuf, thresh, ng, nc, cpb, alpha,
+                         *, spec, m, dpad, g, p):
+    """`_batch_merge_pipeline` with the NORMAL CYCLE chained in front.
+
+    The ``p`` patch rows cover EVERY delta row of the view (wide and
+    overflow rows included) so the normal-cycle scorer sees the plan's
+    exact free masks; the masked-class preemptive merge runs under
+    ``lax.cond`` only when the normal cycle places nothing.  Returns
+    int32[5 + `WIN_FIELDS`]."""
+    if p:
+        nodestate, victims, drain = _overlay(nodestate, victims, drain,
+                                             aux[dpad:dpad + p], pbuf)
+    norm = normal_cycle_core(nodestate, ng, nc, cpb, spec=spec)
+
+    def _skip(_):
+        return jnp.zeros(WIN_FIELDS, jnp.int32)
+
+    def _pre(_):
         return _masked_class_winner(
             anyc, cb, pp, um, kn, cnt, nodestate, victims, drain, i,
             aux[:dpad], aux[dpad + p:], thresh, ng, nc, cpb, alpha,
             spec=spec, m=m, g=g)
 
-    return jax.jit(f)
+    return jnp.concatenate([norm, jax.lax.cond(norm[0] > 0, _skip,
+                                               _pre, None)])
 
 
 @lru_cache(maxsize=None)
 def batch_plan_evaluator(spec: ServerSpec, m: int, dpad: int, g: int,
                          p: int, thresh: int, ng: int, nc: int, cpb: int,
                          alpha: float):
-    """`batch_merge_evaluator` with the NORMAL CYCLE chained in front.
-
-    The ``p`` patch rows cover EVERY delta row of the view (wide and
-    overflow rows included) so the normal-cycle scorer sees the plan's
-    exact free masks; the masked-class preemptive merge runs under
-    ``lax.cond`` only when the normal cycle places nothing — a batched
-    plan is one dispatch end to end, same as a single-request plan.
-    Returns int32[5 + `WIN_FIELDS`]."""
+    """jit of `_batch_plan_pipeline` — a batched plan is one dispatch end
+    to end, same as a single-request plan."""
 
     def f(anyc, cb, pp, um, kn, cnt, nodestate, victims, drain, i, aux,
           pbuf):
-        if p:
-            nodestate, victims, drain = _overlay(nodestate, victims, drain,
-                                                 aux[dpad:dpad + p], pbuf)
-        norm = normal_cycle_core(nodestate, ng, nc, cpb, spec=spec)
-
-        def _skip(_):
-            return jnp.zeros(WIN_FIELDS, jnp.int32)
-
-        def _pre(_):
-            return _masked_class_winner(
-                anyc, cb, pp, um, kn, cnt, nodestate, victims, drain, i,
-                aux[:dpad], aux[dpad + p:], thresh, ng, nc, cpb, alpha,
-                spec=spec, m=m, g=g)
-
-        return jnp.concatenate([norm, jax.lax.cond(norm[0] > 0, _skip,
-                                                   _pre, None)])
+        return _batch_plan_pipeline(
+            anyc, cb, pp, um, kn, cnt, nodestate, victims, drain, i, aux,
+            pbuf, thresh, ng, nc, cpb, alpha, spec=spec, m=m, dpad=dpad,
+            g=g, p=p)
 
     return jax.jit(f)
 
@@ -950,19 +986,70 @@ def _empty_patch_args(cap: int):
     return jnp.asarray(pidx), jnp.asarray(pbuf)
 
 
-def _patch_args(dcs: DeviceClusterState, patches: dict):
+def _evals(dcs: DeviceClusterState):
+    """Evaluator-factory namespace for this device state.
+
+    Single-device states use THIS module's jit factories; a mesh-sharded
+    state (`cluster_parallel.ShardedDeviceClusterState`) routes to
+    `cluster_parallel.sharded_evaluators`, which jits the SAME pipeline
+    bodies with explicit `NamedSharding` constraints — node-axis tensors
+    arrive sharded, patch/index uploads replicate, and the winner vector
+    comes back replicated, so per-node math stays shard-local and only the
+    final argmax chain crosses shards."""
+    mesh = getattr(dcs, "mesh", None)
+    if mesh is None:
+        return sys.modules[__name__]
+    from . import cluster_parallel
+
+    return cluster_parallel.sharded_evaluators(mesh)
+
+
+def _patch_row(patches, node: int) -> VictimRow:
+    """Exact host row for one delta node (`ViewDelta` encodes lazily)."""
+    if isinstance(patches, ViewDelta):
+        return patches.row(node)
+    return patches[node]
+
+
+def _patch_elig(patches, thresh: int):
+    """``(eligible-count, truncation-risk)`` dicts over the delta nodes.
+
+    `ViewDelta` computes its dense rows vectorized from the descriptor
+    metadata (no per-node host encode); plain `VictimRow` dicts are read
+    row by row."""
+    if isinstance(patches, ViewDelta):
+        return patches.elig_bad(thresh)
+    return ({n: int(((r.vp < thresh) & r.stored).sum())
+             for n, r in patches.items()},
+            {n: bool(r.overflow and r.next_priority < thresh)
+             for n, r in patches.items()})
+
+
+def _patch_args(dcs: DeviceClusterState, patches):
     """One overlay buffer covering the view's delta rows (``patches``) AND
     the device state's unflushed ``pending`` rows (``sync(flush=False)``):
     both classes of stale row ride the same in-dispatch scatter, so the
     plan hot path pays ONE host→device upload and zero standalone scatter
-    dispatches.  Returns host ``(p, pidx, pbuf)`` (callers upload)."""
+    dispatches.
+
+    ``patches`` is a ``{node: VictimRow}`` dict (legacy / batch-session
+    paths) or a `ViewDelta`: its dense rows are then rebuilt ON DEVICE by
+    the delta encoder and only fallback rows are host-packed.  Returns
+    ``(p, pidx, pbuf)`` — ``pidx`` always host int32 (it travels inside
+    the aux upload); ``pbuf`` may already live on device."""
     cap = dcs.cap
     width = NODE_FIELDS + VICTIM_FIELDS * cap + DRAIN_FIELDS
     pending = sorted(set(dcs.pending) - set(patches))
-    if not patches and not pending:
-        return 0, np.zeros(0, np.int32), np.zeros((0, width), np.int32)
+    dense = None
     bufs, ids = [], []
-    if patches:
+    if isinstance(patches, ViewDelta):
+        dense = patches.device_rows(dcs)
+        if patches.fallback:
+            nodes = sorted(patches.fallback)
+            bufs.append(flatten_rows(*pack_rows(
+                [patches.fallback[n] for n in nodes], nodes, cap)))
+            ids.extend(nodes)
+    elif patches:
         nodes = sorted(patches)
         bufs.append(flatten_rows(
             *pack_rows([patches[n] for n in nodes], nodes, cap)))
@@ -970,11 +1057,23 @@ def _patch_args(dcs: DeviceClusterState, patches: dict):
     if pending:
         bufs.append(flatten_rows(*pack_context_rows(dcs.mirror, pending)))
         ids.extend(pending)
-    buf = np.concatenate(bufs) if len(bufs) > 1 else bufs[0]
-    idx = _pad_idx(ids)
-    if len(idx) > len(ids):
-        buf = np.pad(buf, ((0, len(idx) - len(ids)), (0, 0)))
-    return len(idx), idx, buf
+    hidx = hbuf = None
+    if ids:
+        hidx = _pad_idx(ids)
+        hbuf = np.concatenate(bufs) if len(bufs) > 1 else bufs[0]
+        if len(hidx) > len(ids):
+            hbuf = np.pad(hbuf, ((0, len(hidx) - len(ids)), (0, 0)))
+    if dense is None:
+        if hbuf is None:
+            return 0, np.zeros(0, np.int32), np.zeros((0, width), np.int32)
+        return len(hidx), hidx, hbuf
+    didx, dbuf = dense
+    if hbuf is None:
+        return len(didx), didx, dbuf
+    # disjoint node sets by construction; sentinel pads drop out of the
+    # overlay scatter, so per-section pow2 buckets concatenate directly
+    idx = np.concatenate([didx, hidx])
+    return len(idx), idx, jnp.concatenate([dbuf, jnp.asarray(hbuf)])
 
 
 def _pad_idx(ids, floor: int = 4) -> np.ndarray:
@@ -1034,15 +1133,20 @@ def split_fused_nodes(dcs: DeviceClusterState, patches: dict, thresh: int,
     whole scan is skipped.
     """
     ctx = dcs.mirror
-    patch_big = [n for n, r in patches.items() if r.count > MIN_M]
+    if isinstance(patches, ViewDelta):
+        patch_big = [n for n in patches if patches.count(n) > MIN_M]
+    else:
+        patch_big = [n for n, r in patches.items() if r.count > MIN_M]
     if dcs.count_max <= MIN_M and not patch_big:
         return FusedSplit(MIN_M, [], [], [])
     n = dcs.cluster.num_nodes
     elig = ((ctx.vp < thresh) & ctx.stored).sum(axis=1)
     bad = ctx.overflow & (ctx.next_prio < thresh)
-    for node, row in patches.items():
-        elig[node] = int(((row.vp < thresh) & row.stored).sum())
-        bad[node] = bool(row.overflow and row.next_priority < thresh)
+    p_elig, p_bad = _patch_elig(patches, thresh)
+    for node, e in p_elig.items():
+        elig[node] = e
+    for node, b in p_bad.items():
+        bad[node] = b
     if nodes is None:
         allowed = np.ones(n, bool)
     else:
@@ -1077,8 +1181,7 @@ def _append_winner(out: CandidateShortlist, res, sel_nodes, patches, ctx):
         node = int(sel_nodes.get(row, row))   # combined resident+mid rows
     else:
         node = int(sel_nodes[row])        # gathered chunk
-    prow = patches.get(node)
-    vu = prow.vu if prow is not None else ctx.vu[node]
+    vu = _patch_row(patches, node).vu if node in patches else ctx.vu[node]
     uids = [int(vu[j]) for j in range(len(vu)) if (combo >> j) & 1]
     victims = tuple(sorted(uids))
     out.append(Candidate(node=node, victims=victims, tier=tier,
@@ -1138,14 +1241,18 @@ def source_candidates_fused(
     # flush=False: small dirty sets stay pending and ride the dispatch's
     # patch overlay instead of paying a standalone scatter dispatch
     dcs = base.device_state().sync(flush=False)
+    ev = _evals(dcs)
     ctx = dcs.mirror
     thresh = workload.priority
     ng, nc, cpb = _req_scalars(spec, workload)
-    delta = set(cluster.delta_nodes()) if hasattr(cluster, "delta_nodes") \
-        else set()
-    if nodes is not None:
+    if nodes is None:
+        patches = _view_patches_of(cluster, dcs)
+    else:
+        delta = set(cluster.delta_nodes()) if hasattr(cluster,
+                                                      "delta_nodes") \
+            else set()
         delta &= set(nodes)
-    patches = {d: encode_row(cluster, d, ctx.cap) for d in sorted(delta)}
+        patches = {d: encode_row(cluster, d, ctx.cap) for d in sorted(delta)}
     p, pidx, pbuf = _patch_args(dcs, patches)
     req = (thresh, ng, nc, cpb, float(alpha))
     pargs = None     # (pidx, pbuf) on device, built on first gathered use
@@ -1161,9 +1268,9 @@ def source_candidates_fused(
         out = CandidateShortlist(_overflow_candidates(cluster, workload,
                                                       split.overflow))
         out.n_candidates = len(out)
-        res = resident_evaluator(spec, split.m_res, p, g, *req)(
+        res = ev.resident_evaluator(spec, split.m_res, p, g, *req)(
             dcs.nodestate, dcs.victims, dcs.drain, aux_d, pbuf_d)
-        n = dcs.cluster.num_nodes
+        n = dcs.n_rows
         sel = {n + j: node for j, node in enumerate(mid)} if mid else None
         pending.append((res, sel))
         mid = []     # consumed by the combined dispatch
@@ -1177,7 +1284,7 @@ def source_candidates_fused(
         narrow = [c for c in nodes if c not in excluded]
         if narrow:
             pargs = (jnp.asarray(pidx), jnp.asarray(pbuf))
-            res = gathered_evaluator(spec, split.m_res, p, *req)(
+            res = ev.gathered_evaluator(spec, split.m_res, p, *req)(
                 dcs.nodestate, dcs.victims, dcs.drain, *pargs,
                 jnp.asarray(_pad_idx(narrow)))
             pending.append((res, narrow))
@@ -1186,7 +1293,7 @@ def source_candidates_fused(
             chunk = rows[lo:lo + MAX_ROWS_WIDE]
             if pargs is None:
                 pargs = (jnp.asarray(pidx), jnp.asarray(pbuf))
-            res = gathered_evaluator(spec, m, p, *req)(
+            res = ev.gathered_evaluator(spec, m, p, *req)(
                 dcs.nodestate, dcs.victims, dcs.drain, *pargs,
                 jnp.asarray(_pad_idx(chunk)))
             pending.append((res, chunk))
@@ -1214,11 +1321,17 @@ class FusedPlanResult:
     n_candidates: int = 0
 
 
-def _view_patches_of(cluster, dcs: DeviceClusterState) -> dict:
-    """Encode a ClusterView's delta rows (empty for the base cluster)."""
-    delta = set(cluster.delta_nodes()) if hasattr(cluster, "delta_nodes") \
-        else set()
-    return {d: encode_row(cluster, d, dcs.cap) for d in sorted(delta)}
+def _view_patches_of(cluster, dcs: DeviceClusterState):
+    """Delta-row descriptors for a ClusterView ({} for the base cluster).
+
+    The fused ``nodes=None`` paths get a `ViewDelta`: dense rows are
+    rebuilt by the IN-DISPATCH delta encoder straight from the planned
+    bind/evict/restore masks the view carries, so the per-plan host work
+    is O(delta instances) descriptor math — no ``encode_row`` victim sort
+    per dirty row, and patch rows never round-trip through python."""
+    if not hasattr(cluster, "delta_nodes"):
+        return {}
+    return ViewDelta(cluster, dcs.mirror, dcs.pending)
 
 
 def plan_normal_fused(cluster, workload: WorkloadSpec):
@@ -1234,6 +1347,7 @@ def plan_normal_fused(cluster, workload: WorkloadSpec):
     spec = cluster.spec
     base = getattr(cluster, "base", cluster)
     dcs = base.device_state().sync(flush=False)
+    ev = _evals(dcs)
     patches = _view_patches_of(cluster, dcs)
     p, pidx, pbuf = _patch_args(dcs, patches)
     ng, nc, cpb = _req_scalars(spec, workload)
@@ -1241,8 +1355,8 @@ def plan_normal_fused(cluster, workload: WorkloadSpec):
         aux_d, pbuf_d = _empty_patch_args(dcs.cap)
     else:
         aux_d, pbuf_d = jnp.asarray(pidx), jnp.asarray(pbuf)
-    res = normal_evaluator(spec, p, ng, nc, cpb)(dcs.nodestate, aux_d,
-                                                 pbuf_d)
+    res = ev.normal_evaluator(spec, p, ng, nc, cpb)(dcs.nodestate, aux_d,
+                                                    pbuf_d)
     found, node, tier, gm, cm = (int(x) for x in jax.device_get(res))
     if not found:
         return None
@@ -1299,6 +1413,7 @@ def plan_fused(cluster, workload: WorkloadSpec, alpha: float = DEFAULT_ALPHA,
     spec = cluster.spec
     base = getattr(cluster, "base", cluster)
     dcs = base.device_state().sync(flush=False)
+    ev = _evals(dcs)
     ctx = dcs.mirror
     thresh = workload.priority
     ng, nc, cpb = _req_scalars(spec, workload)
@@ -1308,10 +1423,10 @@ def plan_fused(cluster, workload: WorkloadSpec, alpha: float = DEFAULT_ALPHA,
                                               p, pidx, pbuf)
     mid = split.mid
     req = (thresh, ng, nc, cpb, float(alpha))
-    res = plan_evaluator(spec, split.m_res, p, g, *req)(
+    res = ev.plan_evaluator(spec, split.m_res, p, g, *req)(
         dcs.nodestate, dcs.victims, dcs.drain, aux_d, pbuf_d)
     vals = [int(x) for x in jax.device_get(res)]
-    n = dcs.cluster.num_nodes
+    n = dcs.n_rows
     sel = {n + j: node for j, node in enumerate(mid)} if mid else None
 
     def shortlist():
@@ -1325,7 +1440,7 @@ def plan_fused(cluster, workload: WorkloadSpec, alpha: float = DEFAULT_ALPHA,
         # to have failed — they are unreachable work otherwise
         for lo in range(0, len(split.wide), MAX_ROWS_WIDE):
             chunk = split.wide[lo:lo + MAX_ROWS_WIDE]
-            yield gathered_evaluator(spec, ctx.cap, p, *req)(
+            yield ev.gathered_evaluator(spec, ctx.cap, p, *req)(
                 dcs.nodestate, dcs.victims, dcs.drain,
                 jnp.asarray(pidx), jnp.asarray(pbuf),
                 jnp.asarray(_pad_idx(chunk))), chunk
@@ -1361,6 +1476,7 @@ class BatchSourcingSession:
         self.spec = cluster.spec
         self.alpha = float(alpha)
         self.dcs = cluster.device_state().sync()
+        self.ev = _evals(self.dcs)
         self.ctx = self.dcs.mirror
         self._row_cache: dict[int, tuple[int, VictimRow]] = {}
         self.reqs = [(wl.priority,) + _req_scalars(self.spec, wl)
@@ -1386,8 +1502,8 @@ class BatchSourcingSession:
         cpb = np.zeros(rp, np.int32)
         for j, (t, g, c, b) in enumerate(self.reqs):
             th[j], ng[j], nc[j], cpb[j] = t, g, c, b
-        self.class_data = batch_class_evaluator(self.spec, self.gate,
-                                                self.alpha)(
+        self.class_data = self.ev.batch_class_evaluator(self.spec, self.gate,
+                                                        self.alpha)(
             self.dcs.nodestate, self.dcs.victims, self.dcs.drain,
             jnp.asarray(th), jnp.asarray(ng), jnp.asarray(nc),
             jnp.asarray(cpb))
@@ -1442,7 +1558,7 @@ class BatchSourcingSession:
         thresh, ng, nc, cpb = self.reqs[i]
         ctx = self.ctx
         cap = ctx.cap
-        n = self.cluster.num_nodes
+        n = self.dcs.n_rows
         # class data was precomputed at ``self.gate``: rows above the gate
         # (minus this plan's delta rows) ride the merge dispatch's gather
         # section (mid) or the chunked 2^cap re-dispatch (wide)
@@ -1469,8 +1585,8 @@ class BatchSourcingSession:
         else:
             aux_d = jnp.asarray(np.concatenate([didx, pidx, gidx]))
             pbuf_d = jnp.asarray(pbuf)
-        res = batch_merge_evaluator(self.spec, NARROW_M, len(didx),
-                                    len(gidx), *req)(
+        res = self.ev.batch_merge_evaluator(self.spec, NARROW_M, len(didx),
+                                            len(gidx), *req)(
             *self.class_data, self.dcs.nodestate, self.dcs.victims,
             self.dcs.drain, jnp.int32(i), aux_d, pbuf_d)
         sel = {n + j: node for j, node in enumerate(gather)}
@@ -1484,7 +1600,7 @@ class BatchSourcingSession:
             rows = d_wide + wide
             for lo in range(0, len(rows), MAX_ROWS_WIDE):
                 chunk = rows[lo:lo + MAX_ROWS_WIDE]
-                res = gathered_evaluator(self.spec, cap, pw, *req)(
+                res = self.ev.gathered_evaluator(self.spec, cap, pw, *req)(
                     self.dcs.nodestate, self.dcs.victims, self.dcs.drain,
                     *pargs, jnp.asarray(_pad_idx(chunk)))
                 pending.append((res, chunk))
@@ -1505,7 +1621,7 @@ class BatchSourcingSession:
         thresh, ng, nc, cpb = self.reqs[i]
         ctx = self.ctx
         cap = ctx.cap
-        n = self.cluster.num_nodes
+        n = self.dcs.n_rows
         (delta, patches, mid, wide, overflow, d_over, d_wide,
          d_dense) = self._route(view, thresh)
         # ALL delta rows ride the overlay (wide/overflow included): the
@@ -1520,8 +1636,8 @@ class BatchSourcingSession:
             aux_d = jnp.asarray(np.concatenate([didx, pidx, gidx]))
             pbuf_d = jnp.asarray(pbuf)
         req = (thresh, ng, nc, cpb, self.alpha)
-        res = batch_plan_evaluator(self.spec, NARROW_M, len(didx),
-                                   len(gidx), p, *req)(
+        res = self.ev.batch_plan_evaluator(self.spec, NARROW_M, len(didx),
+                                           len(gidx), p, *req)(
             *self.class_data, self.dcs.nodestate, self.dcs.victims,
             self.dcs.drain, jnp.int32(i), aux_d, pbuf_d)
         vals = [int(x) for x in jax.device_get(res)]
@@ -1548,7 +1664,7 @@ class BatchSourcingSession:
             rows = d_wide + wide
             for lo in range(0, len(rows), MAX_ROWS_WIDE):
                 chunk = rows[lo:lo + MAX_ROWS_WIDE]
-                yield gathered_evaluator(self.spec, cap, pw, *req)(
+                yield self.ev.gathered_evaluator(self.spec, cap, pw, *req)(
                     self.dcs.nodestate, self.dcs.victims, self.dcs.drain,
                     *pargs, jnp.asarray(_pad_idx(chunk))), chunk
 

@@ -29,7 +29,19 @@ without ``fused_place`` keep the host normal cycle but fuse Filtering into
 sourcing (``nodes=None``).  ``invalidate_node`` (hit by every
 bind/evict/restore) marks single device rows stale; they re-upload as one
 ``.at[rows].set()`` scatter on the next plan, so cluster state never leaves
-the accelerator wholesale.
+the accelerator wholesale.  Per-plan host work is O(delta), not O(N): the
+mutation op journal replays dirty mirror rows vectorized, and view-delta
+patch rows are rebuilt ON DEVICE by the delta encoder
+(`repro.core.cluster.ViewDelta`) instead of host-encoded per row.
+
+``imp_sharded`` (`repro.core.cluster_parallel`) is ``imp_batched`` with
+the device-resident state sharded over a 1-D device mesh
+(``Cluster.device_state(sharded=True)``: node axis padded to the mesh
+size, `NamedSharding` pinned through scatter/rebuild/delta-encode): the
+same fused entry points route to per-mesh jits of the identical traced
+pipeline bodies, per-node math stays shard-local, only the final argmax
+chain crosses shards, and decisions stay bit-identical — plans, batch
+sessions, and the day cycle work unchanged at thousands of nodes.
 
 The engine list above is rendered from the live registry
 (``repro.core.engines.registered_engines``); custom engines registered with

@@ -34,6 +34,41 @@ class SimConfig:
     alpha: float = 0.5
 
 
+class CompileWatch:
+    """Counts XLA backend compiles so timed samples that secretly pay
+    compile time (a cold jit bucket hit mid-run) can be tagged instead of
+    polluting the latency distribution.  Install once per process; ``mark``
+    /``delta`` bracket a timed region."""
+
+    _installed: "CompileWatch | None" = None
+
+    def __init__(self) -> None:
+        self.count = 0
+
+        def _cb(event: str, duration: float, **kw) -> None:
+            if event.endswith("backend_compile_duration"):
+                self.count += 1
+
+        try:
+            from jax import monitoring
+
+            monitoring.register_event_duration_secs_listener(_cb)
+        except Exception:
+            pass    # no jax (host-only engines): every delta reads 0
+
+    @classmethod
+    def get(cls) -> "CompileWatch":
+        if cls._installed is None:
+            cls._installed = cls()
+        return cls._installed
+
+    def mark(self) -> int:
+        return self.count
+
+    def delta(self, mark: int) -> int:
+        return self.count - mark
+
+
 @dataclasses.dataclass
 class HitRateReport:
     engine: str
@@ -42,10 +77,17 @@ class HitRateReport:
     failures: int = 0          # no feasible candidate found
     placements: int = 0        # normal-cycle (non-preemptive) outcomes
     sourcing_us: list[float] = dataclasses.field(default_factory=list)
+    #: aligned with ``sourcing_us``: True where the timed region compiled
+    #: at least one new XLA program (see `CompileWatch`)
+    compiled: list[bool] = dataclasses.field(default_factory=list)
 
     @property
     def hit_rate(self) -> float:
         return self.hits / self.preemptions if self.preemptions else 0.0
+
+    @property
+    def compiled_samples(self) -> int:
+        return sum(self.compiled)
 
     @property
     def decisions(self) -> int:
@@ -249,12 +291,15 @@ def run_latency_experiment(
         cluster = build_saturated_cluster(
             dataclasses.replace(cfg, seed=cfg.seed + cycle))
         sched = TopoScheduler(cluster, engine=engine, alpha=cfg.alpha)
+        watch = CompileWatch.get()
         for _ in range(min(samples - len(report.sourcing_us), 10)):
+            m = watch.mark()
             dec = sched.schedule_or_preempt(wl)
             if dec.preempted:
                 report.preemptions += 1
                 report.hits += int(dec.hit)
                 report.sourcing_us.append(dec.sourcing_us)
+                report.compiled.append(watch.delta(m) > 0)
             elif dec.rejected:
                 report.failures += 1
                 break
@@ -291,7 +336,9 @@ def run_plan_latency_experiment(
             dataclasses.replace(cfg, seed=cfg.seed + cycle))
         sched = TopoScheduler(cluster, engine=engine, alpha=cfg.alpha,
                               warmup=warmup)
+        watch = CompileWatch.get()
         for _ in range(min(samples - len(report.sourcing_us), 10)):
+            m = watch.mark()
             t0 = time.perf_counter()
             txn = sched.plan(wl)
             plan_us = (time.perf_counter() - t0) * 1e6
@@ -300,6 +347,7 @@ def run_plan_latency_experiment(
                 report.preemptions += 1
                 report.hits += int(dec.hit)
                 report.sourcing_us.append(plan_us)
+                report.compiled.append(watch.delta(m) > 0)
             elif dec.rejected:
                 report.failures += 1
                 break
@@ -341,7 +389,9 @@ def run_plan_normal_latency(
         raise RuntimeError(
             f"fill={fill} leaves no room for {preemptor_name}: "
             "normal-cycle protocol needs a placeable request")
+    watch = CompileWatch.get()
     for _ in range(samples):
+        m = watch.mark()
         t0 = time.perf_counter()
         txn = sched.plan(wl)
         plan_us = (time.perf_counter() - t0) * 1e6
@@ -349,6 +399,7 @@ def run_plan_normal_latency(
             report.placements += 1
             report.hits += int(txn.decision.hit)
             report.sourcing_us.append(plan_us)
+            report.compiled.append(watch.delta(m) > 0)
         else:
             report.failures += 1
     return report
@@ -374,11 +425,14 @@ def run_plan_batch_latency(
     cluster = build_saturated_cluster(cfg)
     sched = TopoScheduler(cluster, engine=engine, alpha=cfg.alpha)
     sched.plan_batch([wl] * batch)          # jit warm-up round
+    watch = CompileWatch.get()
     for _ in range(rounds):
+        m = watch.mark()
         t0 = time.perf_counter()
         txns = sched.plan_batch([wl] * batch)
         report.sourcing_us.append(
             (time.perf_counter() - t0) * 1e6 / batch)
+        report.compiled.append(watch.delta(m) > 0)
         for t in txns:
             if t.decision.preempted:
                 report.preemptions += 1

@@ -90,9 +90,11 @@ def moe_apply(p, cfg: ModelConfig, x):
                 aux = jax.tree.map(lambda a: jax.lax.pmean(a, axes), aux)
                 return out, aux
 
-            fn = jax.shard_map(
+            from .common import shard_map_compat
+
+            fn = shard_map_compat(
                 body,
-                mesh=get_mesh(),
+                get_mesh(),
                 in_specs=(jax.tree.map(lambda _: P(), p),
                           P(axes, None, None)),
                 out_specs=(P(axes, None, None), P()),

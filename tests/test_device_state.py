@@ -171,3 +171,66 @@ def test_undo_shim_not_reexported():
     assert "undo" not in getattr(core, "__all__", ())
     assert not hasattr(core, "undo")
     assert not hasattr(repro, "undo")
+
+
+@pytest.mark.parametrize("seed", [0, 2, 4, 6])
+def test_journal_replay_matches_full_encode(seed):
+    """The mirror's vectorized op-journal replay — including evict→restore
+    cancellation inside one refresh window — reproduces a from-scratch
+    context bitwise across all eleven dense arrays."""
+    from repro.core.cluster import SourcingContext
+
+    rng = random.Random(2000 + seed)
+    cluster = random_cluster(seed, nodes=6)
+    ctx = cluster.sourcing_context()
+    ctx.refresh()                        # baseline build, journal drained
+    evicted = []
+    for _ in range(14):                  # one burst = one replay window
+        op = rng.random()
+        if op < 0.45 and cluster.instances:
+            inst = cluster.evict(rng.choice(sorted(cluster.instances)))
+            evicted.append(inst)
+        elif op < 0.70 and evicted:
+            inst = evicted.pop(rng.randrange(len(evicted)))
+            fg, fc = cluster.free_masks(inst.node)
+            if (fg & inst.gpu_mask) == inst.gpu_mask and \
+                    (fc & inst.cg_mask) == inst.cg_mask:
+                cluster.restore(inst)    # slots still free: reversible
+        else:
+            node = rng.randrange(cluster.num_nodes)
+            fg, fc = cluster.free_masks(node)
+            if fg & fc:
+                g = (fg & fc) & -(fg & fc)
+                cluster.bind(WL3["D"], node, Placement(g, g, 0))
+    ctx.refresh()                        # incremental journal replay
+    fresh = SourcingContext(cluster)
+    fresh.refresh()                      # all-dirty: full re-encode
+    for name in ("free_gpu", "free_cg", "vg", "vc", "vp", "vu", "rank",
+                 "stored", "count", "overflow", "next_prio"):
+        assert np.array_equal(getattr(ctx, name), getattr(fresh, name)), name
+
+
+@pytest.mark.parametrize("seed", [0, 4, 9, 12])
+def test_view_delta_device_rows_match_host_encode(seed):
+    """Dense `ViewDelta` rows rebuilt by the DEVICE delta encoder equal the
+    host ``encode_row`` packing of the same view — the per-plan patch path
+    no longer round-trips rows through python."""
+    from repro.core.cluster import ClusterView, ViewDelta, flatten_rows
+
+    cluster = random_cluster(seed, nodes=6)
+    sched = TopoScheduler(cluster, engine="imp_batched")
+    dcs = cluster.device_state().sync()
+    view = ClusterView(cluster)
+    for wl in (WL3["B"], WL3["C"], WL3["B"]):
+        sched.plan(wl, view=view, allow_normal=False)
+    assert view.delta_nodes()
+    vd = ViewDelta(view, dcs.mirror, dcs.pending)
+    got = vd.device_rows(dcs)
+    assert got is not None, "expected dense rows for this seed"
+    didx, buf = got
+    d = len(vd.dense)
+    cap = dcs.cap
+    nodes = [int(n) for n in didx[:d]]
+    want = flatten_rows(*pack_rows(
+        [encode_row(view, n, cap) for n in nodes], nodes, cap))
+    assert np.array_equal(np.asarray(buf)[:d], want)

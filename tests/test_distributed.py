@@ -144,3 +144,108 @@ def test_cluster_parallel_sourcing_executes():
         assert int(node) == int(ref[1])
         print("distributed sourcing ok:", float(score), int(node), int(combo))
     """))
+
+
+def test_sharded_engine_decision_parity_randomized():
+    """imp_sharded on a real 8-device mesh is bit-identical to imp_batched
+    over randomized plan / commit / rollback / plan_batch sequences."""
+    tests_dir = os.path.dirname(os.path.abspath(__file__))
+    print(run_py(f"""
+        import random, sys
+        sys.path.insert(0, {tests_dir!r})
+        import jax
+        assert len(jax.devices()) == 8, jax.devices()
+        from test_fused_sourcing import random_cluster, _decision_key, WL3
+        from repro.core import TopoScheduler
+
+        rng = random.Random(7)
+        for trial in range(5):
+            seed = rng.randrange(10_000)
+            nodes = rng.choice((5, 11, 13))   # 11/13 force node-axis padding
+            seqs = {{}}
+            for engine in ("imp_batched", "imp_sharded"):
+                cluster = random_cluster(seed, nodes=nodes)
+                sched = TopoScheduler(cluster, engine=engine)
+                ops = random.Random(seed)
+                seq = []
+                for step in range(8):
+                    wl = WL3[ops.choice("BCD")]
+                    txn = sched.plan(wl, allow_normal=True)
+                    seq.append(_decision_key(txn.decision))
+                    if txn.decision.kind != "reject":
+                        r = ops.random()
+                        if r < 0.5:
+                            txn.commit()
+                        elif r < 0.75:
+                            txn.commit()
+                            txn.rollback()
+                txns = sched.plan_batch(
+                    [WL3[ops.choice("BC")] for _ in range(4)])
+                seq.extend(_decision_key(t.decision) for t in txns)
+                seqs[engine] = seq
+            assert seqs["imp_batched"] == seqs["imp_sharded"], (seed, nodes)
+            print("trial", trial, "seed", seed, "nodes", nodes, "ok")
+        print("randomized sharded parity ok")
+    """))
+
+
+def test_sharded_engine_day_cycle_parity():
+    """A short co-location day-cycle segment produces the identical hour
+    rows under imp_sharded and imp_batched (same preemptions, same
+    scheduled performance) on the 8-device mesh."""
+    print(run_py("""
+        import dataclasses
+        import jax
+        assert len(jax.devices()) == 8, jax.devices()
+        from repro.core.colocation import ColocationConfig, ColocationSim
+
+        reports = {}
+        for engine in ("imp_batched", "imp_sharded"):
+            cfg = ColocationConfig(num_nodes=12, seed=5, engine=engine,
+                                   horizon_hours=5.0)
+            sim = ColocationSim(cfg)
+            reports[engine] = sim.run()
+        a, b = reports["imp_batched"], reports["imp_sharded"]
+        assert len(a.hours) == len(b.hours)
+        for ra, rb in zip(a.hours, b.hours):
+            da, db = dataclasses.asdict(ra), dataclasses.asdict(rb)
+            assert da == db, (da, db)
+        assert a.preemptions == b.preemptions
+        assert a.scheduled_perf == b.scheduled_perf
+        print("day-cycle parity ok:", a.preemptions, "preemptions,",
+              len(a.hours), "hours")
+    """))
+
+
+def test_sharded_state_layout_and_scatter():
+    """The sharded cluster state pads the node axis to the mesh size,
+    spreads every stacked tensor across all 8 devices, and keeps the
+    sharding stable through delta syncs (scatter) and full rebuilds."""
+    print(run_py("""
+        import jax
+        assert len(jax.devices()) == 8, jax.devices()
+        from repro.core import Cluster, RTX4090_SERVER, table3_workloads
+        from repro.core.cluster_parallel import ShardedDeviceClusterState
+        from repro.core.simulator import SimConfig, build_saturated_cluster
+
+        cluster = build_saturated_cluster(SimConfig(num_nodes=13, seed=2))
+        dcs = cluster.device_state(sharded=True)
+        assert isinstance(dcs, ShardedDeviceClusterState)
+        dcs.sync()
+        assert dcs.n_rows == 16 and dcs.nodestate.shape[1] == 16
+        for name in ("nodestate", "victims", "drain"):
+            arr = getattr(dcs, name)
+            devs = {s.device.id for s in arr.addressable_shards}
+            assert len(devs) == 8, (name, devs)
+        before = dcs.nodestate.sharding
+        # delta path: evict one instance -> dirty row -> scatter
+        uid = next(iter(cluster.instances))
+        cluster.evict(uid)
+        dcs.sync()
+        assert dcs.nodestate.sharding == before, dcs.nodestate.sharding
+        # full-rebuild path (majority-dirty fallback) keeps the layout too
+        dcs._dirty.update(range(cluster.num_nodes))
+        dcs.sync()
+        assert dcs.nodestate.sharding == before, dcs.nodestate.sharding
+        print("sharded layout stable across scatter + rebuild")
+    """))

@@ -91,7 +91,7 @@ def test_hlo_walker_scales_scan_bodies():
     stats = hlo.walk_stats(compiled.as_text())
     assert stats["flops_scaled"] == 5 * 2 * 64 ** 3
     # raw cost_analysis counts the body once — the reason the walker exists
-    assert compiled.cost_analysis()["flops"] < stats["flops_scaled"]
+    assert hlo.cost_dict(compiled)["flops"] < stats["flops_scaled"]
 
 
 def test_collective_parser_on_sharded_module():
