@@ -18,7 +18,16 @@ identity check) and fails if
   the smallest to the largest size, or records an ``imp_sharded``-vs-``imp_batched``
   decision divergence at any size — plus a LIVE parity re-check at the two
   smallest sizes (single-process, degenerate one-device mesh: the sharded
-  evaluators must stay bit-identical without the 8-device subprocess).
+  evaluators must stay bit-identical without the 8-device subprocess), or
+* the committed scale block violates the shortlist front-end contract:
+  any row timed while a jit bucket was still compiling
+  (``compiled_n > 0`` — warmup was incomplete, the numbers are invalid),
+  any ``shortlist_parity`` flag false (guaranteed mode must be
+  bit-identical to the full sweep), the shortlisted ``plan_e2e`` P50 not
+  beating its ``*_full`` full-sweep twin at the ``SHORTLIST_GATE_SIZES``
+  (modulo the documented ``SHORTLIST_SPEEDUP_CAPS`` exception),
+  or the shortlisted ``imp_sharded`` plan P50 at the largest size above
+  the ``SHORTLIST_ABS_CAP_US`` absolute budget.
 
 Baseline rows tagged ``"interpret": true`` (Mosaic-interpreter Pallas runs
 on CPU) are placeholders, not wall-clock measurements — the gate skips
@@ -64,6 +73,27 @@ SCALE_GATED_METRICS = ("plan_e2e", "plan_normal_e2e")
 #: on the cap, which would make CI a coin flip.
 SCALE_GATED_ENGINES = ("imp_sharded",)
 
+#: sizes where the shortlisted plan_e2e P50 must beat the full sweep's
+#: (below the default K=128 the prescreen is inactive, so only the two
+#: largest committed sizes carry the speedup claim)
+SHORTLIST_GATE_SIZES = (1024, 10240)
+
+#: per-(size, engine) cap on shortlisted/full P50.  Strictly < 1.0
+#: everywhere the sweep dominates; the one exception is ``imp_sharded``
+#: at 1024 nodes, where BOTH paths are dispatch-overhead-dominated on
+#: the CPU host-platform mesh (~24ms fixed multi-device dispatch vs a
+#: ~4ms single-device sweep) so the prescreen has nothing to cut —
+#: there the gate is non-inferiority (<= 1.15x, i.e. the front-end must
+#: not cost anything real).  ``engine="auto"`` routes 1024-node
+#: clusters to ``imp_batched`` anyway; the sharded speedup claim lives
+#: at 10240 where it is gated strictly.
+SHORTLIST_SPEEDUP_CAPS = {(1024, "imp_sharded"): 1.15}
+
+#: absolute plan-P50 budget for the shortlisted ``imp_sharded`` engine at
+#: the largest committed size — 0.5x the 190ms full-sweep P50 the previous
+#: baseline committed at 10240 nodes
+SHORTLIST_ABS_CAP_US = 95_000.0
+
 
 def check_scale(baseline: dict) -> int:
     """Gate the committed scale block + live small-size sharded parity."""
@@ -104,6 +134,59 @@ def check_scale(baseline: dict) -> int:
             print(f"FAIL scale: imp_sharded decisions diverged from "
                   f"imp_batched at {size} nodes in the committed block")
             failures += 1
+    # benchmark hygiene: a timed sample that paid a compile is not a
+    # latency measurement — refuse the whole committed row
+    for r in scale["rows"]:
+        if r.get("compiled_n", 0) > 0:
+            print(f"FAIL scale: row {r['nodes']}/{r['engine']}/{r['metric']} "
+                  f"timed {r['compiled_n']} compiling sample(s) — rerun "
+                  f"bench_scale_sourcing with full warmup before committing")
+            failures += 1
+    # shortlist contract: guaranteed mode is bit-identical to the sweep...
+    slp = scale.get("shortlist_parity") or {}
+    if not slp:
+        print("FAIL scale: no shortlist_parity flags in the committed "
+              "block (rerun benchmarks.bench_scale_sourcing)")
+        failures += 1
+    for key, ok in sorted(slp.items()):
+        if not ok:
+            print(f"FAIL scale: shortlisted decisions diverged from the "
+                  f"full sweep at {key}")
+            failures += 1
+    # ...and the prescreen must actually pay for itself where it is active
+    for size in SHORTLIST_GATE_SIZES:
+        for engine in ("imp_batched", "imp_sharded"):
+            sl = rows.get((size, engine, "plan_e2e"))
+            fw = rows.get((size, engine + "_full", "plan_e2e"))
+            if not sl or not fw or not sl["p50_us"] or not fw["p50_us"]:
+                print(f"FAIL scale: missing shortlist/full plan_e2e rows "
+                      f"for {engine} at {size} nodes")
+                failures += 1
+                continue
+            speedup = fw["p50_us"] / sl["p50_us"]
+            cap = SHORTLIST_SPEEDUP_CAPS.get((size, engine), 1.0)
+            ok = sl["p50_us"] < fw["p50_us"] * cap
+            kind = "beats sweep" if cap == 1.0 else f"non-inferior({cap}x)"
+            print(f"scale shortlist {engine}@{size}: p50 "
+                  f"{sl['p50_us']:.0f}us vs full sweep {fw['p50_us']:.0f}us "
+                  f"({speedup:.2f}x, gate: {kind}) "
+                  f"[{'ok' if ok else 'REGRESSION'}]")
+            if not ok:
+                failures += 1
+    cap_row = rows.get((max(scale["sizes"]), "imp_sharded", "plan_e2e"))
+    if not cap_row or not cap_row["p50_us"]:
+        print("FAIL scale: missing shortlisted imp_sharded plan_e2e row "
+              "at the largest size")
+        failures += 1
+    elif cap_row["p50_us"] > SHORTLIST_ABS_CAP_US:
+        print(f"FAIL scale: shortlisted imp_sharded plan_e2e p50 "
+              f"{cap_row['p50_us']:.0f}us at {max(scale['sizes'])} nodes "
+              f"exceeds the {SHORTLIST_ABS_CAP_US:.0f}us budget")
+        failures += 1
+    else:
+        print(f"scale shortlist abs cap: imp_sharded plan_e2e p50 "
+              f"{cap_row['p50_us']:.0f}us @ {max(scale['sizes'])} nodes "
+              f"<= {SHORTLIST_ABS_CAP_US:.0f}us [ok]")
     # live parity: rerun the decision sequence at the two smallest sizes
     from repro.core import TopoScheduler, table3_workloads
 

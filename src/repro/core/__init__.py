@@ -12,7 +12,8 @@ from .perfmodel import (TIER_PERF, relative_scheduled_factor,
                         scheduled_factor)
 from .placement import (INFEASIBLE, Placement, achieved_tier, best_tier,
                         is_topology_hit, min_tier_for, place, place_blind)
-from .scheduler import TopoScheduler
+from .preemption_jax import ShortlistConfig
+from .scheduler import AUTO_ENGINE_THRESHOLD, TopoScheduler
 from .scoring import Candidate, score, select_best
 from .topology import A100_SERVER, RTX4090_SERVER, SPECS, TPU_V5E_HOST, ServerSpec
 from .workload import (Instance, TopoPolicy, WorkloadSpec, table1_workloads,
@@ -28,7 +29,8 @@ __all__ = [
     "min_tier_for", "place", "place_blind", "SchedulingDecision",
     "Transaction", "TransactionError", "EngineName", "SourcingEngine",
     "UnknownEngineError", "get_engine", "register_engine",
-    "registered_engines", "TopoScheduler", "Candidate", "score", "select_best",
+    "registered_engines", "AUTO_ENGINE_THRESHOLD", "ShortlistConfig",
+    "TopoScheduler", "Candidate", "score", "select_best",
     "A100_SERVER", "RTX4090_SERVER", "SPECS", "TPU_V5E_HOST", "ServerSpec",
     "Instance", "TopoPolicy", "WorkloadSpec", "table1_workloads",
     "table3_workloads",

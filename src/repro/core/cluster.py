@@ -14,6 +14,7 @@ re-uploads only those rows as one ``.at[rows].set()`` scatter per sync, so a
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
 from typing import Callable
 
@@ -385,6 +386,7 @@ class SourcingContext:
         self.count = np.zeros(n, np.int32)          # preemptible instances
         self.overflow = np.zeros(n, bool)           # count > cap: truncated
         self.next_prio = np.full(n, 2**31 - 1, np.int32)  # 1st unstored prio
+        self.fp = np.zeros(n, np.int64)             # equivalence-class hash
         self._dirty: set[int] = set(range(n))
         # journal-driven refresh: the exact mutation stream since the last
         # refresh, plus a per-node dirty-mark counter.  A dirty row whose
@@ -531,6 +533,34 @@ class SourcingContext:
         ukey = np.where(st, su[:, :cap], np.iinfo(np.int64).max)
         rank = np.argsort(np.argsort(ukey, axis=1, kind="stable"), axis=1)
         self.rank[idx] = np.where(st, rank, 0)
+        self.refingerprint(rows)
+
+    def refingerprint(self, rows) -> None:
+        """Recompute the 64-bit equivalence-class fingerprint of ``rows``.
+
+        The fingerprint covers exactly the fields the fused evaluators
+        score — free masks, victim GPU/CG/priority columns, stored flags,
+        count/overflow/next-priority routing state (the drain masks are
+        derived from free|victims and add nothing) — and deliberately
+        EXCLUDES uids and uid-ranks: nodes differing only in WHICH
+        instances occupy the slots are interchangeable up to the winner
+        argmax's uid tie-break, which fires after the node-id refinement
+        and therefore never distinguishes across nodes.  Maintained
+        incrementally at the same refresh choke points as the rows
+        themselves, so the cost is O(dirty rows) per commit window.
+        """
+        for node in rows:
+            h = hashlib.blake2b(digest_size=8)
+            h.update(self.free_gpu[node].tobytes())
+            h.update(self.free_cg[node].tobytes())
+            h.update(self.count[node].tobytes())
+            h.update(self.overflow[node].tobytes())
+            h.update(self.next_prio[node].tobytes())
+            h.update(self.vg[node].tobytes())
+            h.update(self.vc[node].tobytes())
+            h.update(self.vp[node].tobytes())
+            h.update(self.stored[node].tobytes())
+            self.fp[node] = np.frombuffer(h.digest(), np.int64)[0]
 
     def refresh_row(self, node: int, source) -> None:
         """Fill one row from ``source`` (the base cluster or a ClusterView)."""
@@ -547,6 +577,7 @@ class SourcingContext:
         self.vp[node] = row.vp
         self.vu[node] = row.vu
         self.rank[node] = row.rank
+        self.refingerprint((node,))
 
 
 @dataclasses.dataclass
@@ -1057,6 +1088,10 @@ class DeviceClusterState:
         #: the version they were built at and are ignored once it moves
         self.version = 0
         self.plan_cache: dict = {}
+        #: per-version equivalence-class cache: (version, rep bool[n_rows]
+        #: host mask, device copy).  Rebuilt lazily by ``rep_classes`` —
+        #: a plan window with no commits reuses both arrays untouched.
+        self._rep_cache: tuple | None = None
         self._dirty: set[int] = set(range(cluster.num_nodes))
         cluster.add_dirty_listener(self._mark_dirty)
 
@@ -1101,6 +1136,38 @@ class DeviceClusterState:
         """Length of the device node axis (== ``num_nodes`` here; the
         sharded subclass pads to a multiple of the device count)."""
         return self.cluster.num_nodes
+
+    def rep_classes(self):
+        """Equivalence-class representative mask over the node axis.
+
+        Returns ``(rep_host, rep_dev)``: a ``bool[n_rows]`` mask that is
+        True exactly for the LOWEST-index member of every fingerprint
+        class (`SourcingContext.refingerprint`), host- and device-side.
+        Because the fused winner argmax breaks score ties by lower node
+        id before any uid comparison, the full-sweep winner inside a
+        class is always its lowest-id member — sweeping representatives
+        only is exact.  Call after ``sync()`` (the mirror fingerprints
+        must be fresh); cached per ``version`` so plan-only windows pay
+        a dict probe.  Rows past ``num_nodes`` (sharded padding) carry
+        sentinel node ids and stay False.
+        """
+        cache = self._rep_cache
+        if cache is not None and cache[0] == self.version:
+            return cache[1], cache[2]
+        n = self.cluster.num_nodes
+        rep = np.zeros(self.n_rows, bool)
+        _, first = np.unique(self.mirror.fp[:n], return_index=True)
+        rep[first] = True
+        rep_dev = self._upload_rep(rep)
+        self._rep_cache = (self.version, rep, rep_dev)
+        return rep, rep_dev
+
+    def _upload_rep(self, rep):
+        """Representative-mask upload hook (sharded subclass lays the row
+        axis out over the mesh to match the resident tensors)."""
+        import jax.numpy as jnp
+
+        return jnp.asarray(rep)
 
     def _upload_full(self, ns, v, dr):
         """Full-rebuild upload hook (subclasses re-layout/shard here)."""

@@ -362,6 +362,13 @@ class ShardedDeviceClusterState(DeviceClusterState):
         return _sharded_delta_encoder(self.mesh, self.cap, a)(
             self.nodestate, self.victims, didx, *descs)
 
+    def _upload_rep(self, rep):
+        """Pin the rep mask 1-D row-sharded so the shortlist prescreen
+        stays shard-local up to its top-K collective."""
+        return jax.device_put(
+            np.ascontiguousarray(rep),
+            NamedSharding(self.mesh, P(tuple(self.mesh.axis_names))))
+
 
 # ---------------------------------------------------------------------------------
 # Sharded twins of the fused evaluator factories
@@ -443,6 +450,41 @@ class _ShardedEvaluators:
         return self._get(("gath", spec, m, p, thresh, ng, nc, cpb, alpha),
                          build)
 
+    @property
+    def _rep_sh(self):
+        """1-D row sharding of the equivalence-class rep mask."""
+        return NamedSharding(self.mesh, P(tuple(self.mesh.axis_names)))
+
+    def shortlist_evaluator(self, spec, k, p, f, thresh, ng, nc, cpb,
+                            alpha):
+        def build():
+            def fn(nodestate, victims, drain, rep, aux, pbuf):
+                return _pj._shortlist_pipeline(
+                    nodestate, victims, drain, rep, aux, pbuf, thresh, ng,
+                    nc, cpb, alpha, spec=spec, k=k, p=p, f=f)
+
+            return jax.jit(fn, in_shardings=(
+                self.node_sh, self.victim_sh, self.node_sh, self._rep_sh,
+                self.repl, self.repl), out_shardings=self.repl)
+
+        return self._get(("sl", spec, k, p, f, thresh, ng, nc, cpb,
+                          alpha), build)
+
+    def shortlist_plan_evaluator(self, spec, k, p, f, thresh, ng, nc,
+                                 cpb, alpha):
+        def build():
+            def fn(nodestate, victims, drain, rep, aux, pbuf):
+                return _pj._shortlist_plan2_pipeline(
+                    nodestate, victims, drain, rep, aux, pbuf, thresh, ng,
+                    nc, cpb, alpha, spec=spec, k=k, p=p, f=f)
+
+            return jax.jit(fn, in_shardings=(
+                self.node_sh, self.victim_sh, self.node_sh, self._rep_sh,
+                self.repl, self.repl), out_shardings=self.repl)
+
+        return self._get(("slplan", spec, k, p, f, thresh, ng, nc, cpb,
+                          alpha), build)
+
     def batch_class_evaluator(self, spec, m, alpha):
         def build():
             def f(nodestate, victims, drain, thresh, ng, nc, cpb):
@@ -518,10 +560,11 @@ def _sharded_state(cluster) -> None:
 
 
 def plan_sharded(cluster, workload, alpha: float = DEFAULT_ALPHA,
-                 allow_preempt: bool = True):
+                 allow_preempt: bool = True, shortlist=None):
     """`preemption_jax.plan_fused` over the sharded resident state."""
     _sharded_state(cluster)
-    return _pj.plan_fused(cluster, workload, alpha, allow_preempt)
+    return _pj.plan_fused(cluster, workload, alpha, allow_preempt,
+                          shortlist=shortlist)
 
 
 def plan_normal_sharded(cluster, workload):
@@ -537,21 +580,32 @@ def batch_session_sharded(cluster, workloads, alpha: float):
 
 
 def warmup_sharded(cluster, alpha: float = DEFAULT_ALPHA, batch: int = 8,
-                   workloads=None) -> None:
+                   workloads=None, shortlist=None) -> None:
     """`preemption_jax.warmup_fused` against the sharded jit variants."""
     _sharded_state(cluster)
-    _pj.warmup_fused(cluster, alpha, batch, workloads)
+    _pj.warmup_fused(cluster, alpha, batch, workloads, shortlist=shortlist)
 
 
 @register_engine("imp_sharded", batched=True, needs_alpha=True,
                  fused_filter=True, fused_place=True, plan_fn=plan_sharded,
                  normal_fn=plan_normal_sharded,
                  batch_factory=batch_session_sharded,
-                 warmup_fn=warmup_sharded)
+                 warmup_fn=warmup_sharded, supports_shortlist=True)
 def source_candidates_sharded(cluster, workload, nodes=None,
-                              alpha: float = DEFAULT_ALPHA):
+                              alpha: float = DEFAULT_ALPHA,
+                              shortlist=None):
     """``imp_batched`` semantics, mesh-sharded state: same fused dispatch
-    chain, node axis split across every local device."""
+    chain, node axis split across every local device.  The shortlist
+    prescreen runs shard-local; only the top-K gather and the argmax
+    chain cross shards."""
     _sharded_state(cluster)
     return _pj.source_candidates_fused(cluster, workload, nodes,
-                                       alpha=alpha)
+                                       alpha=alpha, shortlist=shortlist)
+
+
+# full-sweep parity oracle (see ``imp_batched_full``)
+register_engine("imp_sharded_full", batched=True, needs_alpha=True,
+                fused_filter=True, fused_place=True, plan_fn=plan_sharded,
+                normal_fn=plan_normal_sharded,
+                batch_factory=batch_session_sharded,
+                warmup_fn=warmup_sharded)(source_candidates_sharded)

@@ -123,6 +123,10 @@ class ColocationConfig:
     #: monitor — the A/B baseline that reports attainment without admitting
     #: request-level work.  None with ``elastic=True`` uses the defaults.
     elastic_cfg: object | None = None
+    #: shortlist front-end knobs forwarded to `TopoScheduler` (engines that
+    #: don't support shortlisting ignore them); ``shortlist_k=0`` disables
+    shortlist_k: int = 128
+    shortlist_mode: str = "guaranteed"
 
 
 @dataclasses.dataclass
@@ -364,7 +368,9 @@ class ColocationSim:
         self.cluster = cluster if cluster is not None else Cluster(
             cfg.spec, cfg.num_nodes)
         self.sched = TopoScheduler(self.cluster, engine=cfg.engine,
-                                   alpha=cfg.alpha, warmup=cfg.warmup)
+                                   alpha=cfg.alpha, warmup=cfg.warmup,
+                                   shortlist_k=cfg.shortlist_k,
+                                   shortlist_mode=cfg.shortlist_mode)
         self.auto = Autoscaler(self.cluster, self.sched,
                                policies if policies is not None else [],
                                backfill_chunk=cfg.backfill_chunk)

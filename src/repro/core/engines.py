@@ -96,6 +96,11 @@ class EngineSpec:
     #: fn(cluster, alpha): pre-compile the engine's jit buckets at
     #: ``TopoScheduler(..., warmup=True)`` construction
     warmup_fn: Callable | None = None
+    #: the engine's ``plan_fn``/``source_nodes``/``warmup_fn`` accept a
+    #: ``shortlist=`` `preemption_jax.ShortlistConfig`: the two-stage
+    #: equivalence-class + top-K sourcing front-end.  Full-sweep oracle
+    #: registrations (``*_full``) share the functions with the flag off.
+    supports_shortlist: bool = False
 
     def source(self, cluster, workload, node: int) -> list[Candidate]:
         if self.source_node is not None:
@@ -109,26 +114,36 @@ class EngineSpec:
         return self.batch_factory(cluster, workloads, alpha)
 
     def plan_fused(self, cluster, workload, alpha: float,
-                   allow_preempt: bool = True):
+                   allow_preempt: bool = True, shortlist=None):
         """Both Algorithm 1 cycles in one dispatch (``fused_place``)."""
+        if self.supports_shortlist and shortlist is not None:
+            return self.plan_fn(cluster, workload, alpha, allow_preempt,
+                                shortlist=shortlist)
         return self.plan_fn(cluster, workload, alpha, allow_preempt)
 
     def plan_normal(self, cluster, workload):
         """The normal cycle alone as one device dispatch."""
         return self.normal_fn(cluster, workload)
 
-    def warmup(self, cluster, alpha: float) -> None:
+    def warmup(self, cluster, alpha: float, shortlist=None) -> None:
         """Pre-compile jit buckets (no-op for engines without warmup_fn)."""
-        if self.warmup_fn is not None:
+        if self.warmup_fn is None:
+            return
+        if self.supports_shortlist and shortlist is not None:
+            self.warmup_fn(cluster, alpha, shortlist=shortlist)
+        else:
             self.warmup_fn(cluster, alpha)
 
     def source_all(self, cluster, workload, nodes: list[int],
-                   alpha: float | None = None) -> list[Candidate]:
+                   alpha: float | None = None,
+                   shortlist=None) -> list[Candidate]:
         if self.source_nodes is not None:
+            kw = {}
             if self.needs_alpha and alpha is not None:
-                got = self.source_nodes(cluster, workload, nodes, alpha=alpha)
-            else:
-                got = self.source_nodes(cluster, workload, nodes)
+                kw["alpha"] = alpha
+            if self.supports_shortlist and shortlist is not None:
+                kw["shortlist"] = shortlist
+            got = self.source_nodes(cluster, workload, nodes, **kw)
             # keep list subclasses intact (CandidateShortlist.n_candidates)
             return got if isinstance(got, list) else list(got)
         out: list[Candidate] = []
@@ -160,6 +175,7 @@ _REGISTRY: dict[str, SourcingEngine] = {}
 _LAZY: dict[str, str] = {
     "imp_pallas": "repro.kernels.topo_score",
     "imp_sharded": "repro.core.cluster_parallel",
+    "imp_sharded_full": "repro.core.cluster_parallel",
 }
 
 
@@ -176,6 +192,7 @@ def register_engine(
     normal_fn: Callable | None = None,
     batch_factory: Callable | None = None,
     warmup_fn: Callable | None = None,
+    supports_shortlist: bool = False,
 ):
     """Decorator: register a sourcing function (or a full engine object).
 
@@ -213,6 +230,7 @@ def register_engine(
                 normal_fn=normal_fn,
                 batch_factory=batch_factory,
                 warmup_fn=warmup_fn,
+                supports_shortlist=supports_shortlist,
             )
         _LAZY.pop(name, None)
         return obj

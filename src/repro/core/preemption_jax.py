@@ -805,6 +805,217 @@ def gathered_evaluator(spec: ServerSpec, m: int, p: int,
     return jax.jit(f)
 
 
+# ---------------------------------------------------------------------------------
+# Two-stage shortlist sourcing: equivalence-class prescreen + top-K exact sweep
+# ---------------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShortlistConfig:
+    """Knobs of the two-stage shortlist sourcing front-end.
+
+    ``k`` is the number of representative rows the stage-1 prescreen keeps
+    for the exact stage-2 subset sweep.  ``mode``:
+
+    * ``"guaranteed"`` — bit-identical decisions to the full sweep: the
+      prescreen bound is admissible, and whenever the in-dispatch
+      certainty check cannot PROVE the winner beats every excluded row's
+      upper bound, the caller re-dispatches the full sweep.
+    * ``"best_effort"`` — fixed-K latency cap: the shortlist winner is
+      returned even when uncertain (admission control under a latency
+      SLO; the winner is still an exactly-evaluated feasible candidate,
+      merely not provably the global argmax).
+    """
+
+    k: int = 128
+    mode: str = "guaranteed"
+
+    def __post_init__(self) -> None:
+        if self.k <= 0:
+            raise ValueError(f"shortlist k must be positive, got {self.k}")
+        if self.mode not in ("guaranteed", "best_effort"):
+            raise ValueError(f"unknown shortlist mode {self.mode!r}")
+
+
+def _prescreen_core(nodestate, victims, drain, rep,
+                    thresh, ng, nc, cpb, alpha, *, spec, k):
+    """Stage 1: admissible per-row Eq. 2 upper bound + top-K selection.
+
+    Per row, from the resident aggregates alone (no subset axis): free the
+    ENTIRE eligible victim prefix at once and tier the result — any real
+    subset frees a sub-mask, and the tier score is monotone in freed
+    resources; take ``1/max(min eligible priority, 1)`` as the priority
+    term — any non-empty subset's priority sum is at least the minimum.
+    Both terms therefore upper-bound every subset's exact score (the empty
+    subset is bounded by its own EXACT score from the free masks).  The
+    same combination of f32 ops as the argmax keeps the bound monotone
+    under rounding.
+
+    Rows gated out (`rep` = False non-representatives, wide/overflow rows
+    the host re-dispatches, sentinel padding, bound -inf) never enter the
+    shortlist.  Returns ``(gidx int32[k], excl_ub f32[])``: the gather
+    indices of the top-K surviving rows (sentinel-padded so short fills
+    gather dead rows) and the best bound left OUTSIDE the shortlist — the
+    stage-2 certainty reference.
+    """
+    free_gpu = nodestate[NS_FREE_GPU]
+    free_cg = nodestate[NS_FREE_CG]
+    node_ids = nodestate[NS_NODE_ID]
+    overflow = nodestate[NS_OVERFLOW] != 0
+    next_prio = nodestate[NS_NEXT_PRIO]
+    vg = victims[VF_GPU]
+    vc = victims[VF_CG]
+    vp = victims[VF_PRIO]
+    stored = victims[VF_STORED] != 0
+
+    consts = spec_constants(spec)
+    numa_g = consts["numa_gpu_masks"]
+    numa_c = consts["numa_cg_masks"]
+    sock_onehot = consts["sock_onehot"]
+
+    elig = stored & (vp < thresh)                            # [N, cap]
+    elig_n = jnp.sum(elig.astype(jnp.int32), axis=1)         # [N]
+    # victim masks are pairwise disjoint and disjoint from free: freeing
+    # the whole eligible prefix is a sum, same trick as the subset fold
+    eg = free_gpu + jnp.sum(jnp.where(elig, vg, 0), axis=1)
+    ec = free_cg + jnp.sum(jnp.where(elig, vc, 0), axis=1)
+    cnt_g = jax.lax.population_count(eg[:, None] & numa_g[None, :])
+    cnt_c = jax.lax.population_count(ec[:, None] & numa_c[None, :])
+    et = _tier_from_counts_dyn(cnt_g, cnt_c, sock_onehot, ng, nc, cpb)
+    cnt_fg = jax.lax.population_count(free_gpu[:, None] & numa_g[None, :])
+    cnt_fc = jax.lax.population_count(free_cg[:, None] & numa_c[None, :])
+    ft = _tier_from_counts_dyn(cnt_fg, cnt_fc, sock_onehot, ng, nc, cpb)
+
+    tier_vals = jnp.asarray(tuple(TIER_SCORES) + (0.0,), jnp.float32)
+    min_p = jnp.min(jnp.where(elig, vp, _INT32_MAX), axis=1)
+    pterm = jnp.where(min_p > 0,
+                      1.0 / jnp.maximum(min_p, 1).astype(jnp.float32), 1.0)
+    neg = jnp.float32(-jnp.inf)
+    # k=0: the empty subset's score is exact (prio term is 1.0 by
+    # definition); k>0: tier of the all-eligible-freed masks + min-prio term
+    ub0 = jnp.where(ft < 3, alpha * 1.0 + (1.0 - alpha) * tier_vals[ft], neg)
+    ubk = jnp.where((elig_n > 0) & (et < 3),
+                    alpha * pterm + (1.0 - alpha) * tier_vals[et], neg)
+    ub = jnp.maximum(ub0, ubk)
+
+    ok = ((node_ids < _INT32_MAX) & rep & (elig_n <= NARROW_M)
+          & ~(overflow & (next_prio < thresh)) & (ub > neg))
+    ubm = jnp.where(ok, ub, neg)
+    topv, topi = jax.lax.top_k(ubm, k)      # ties break toward lower index
+    live = topv > neg
+    gidx = jnp.where(live, topi, _INT32_MAX).astype(jnp.int32)
+    selm = jnp.zeros(ubm.shape[0], bool).at[topi].set(live)
+    excl_ub = jnp.max(jnp.where(ok & ~selm, ub, neg))
+    return gidx, excl_ub
+
+
+def _shortlist_winner(nodestate, victims, drain, rep,
+                      thresh, ng, nc, cpb, alpha, *, spec, k):
+    """Prescreen → gather K rows → exact sweep → certainty check.
+
+    Stage 2 is the `NARROW_M`-wide exact pipeline over just the gathered
+    rows (the prescreen's ``elig <= NARROW_M`` gate makes the width
+    sufficient, so the mid tier needs no separate dispatch).  Returns
+    int32[`WIN_FIELDS` + 2]: the placed winner vector followed by the
+    winner's REAL node id (the argmax row indexes the gathered axis) and
+    the certainty flag — 1 iff the winner's exact score STRICTLY beats
+    the best admissible bound left outside the shortlist (or, with no
+    winner, iff nothing was left outside), which proves the full sweep
+    could not have decided differently.
+    """
+    gidx, excl_ub = _prescreen_core(nodestate, victims, drain, rep,
+                                    thresh, ng, nc, cpb, alpha,
+                                    spec=spec, k=k)
+    ns = jnp.take(nodestate, gidx, axis=1, mode="fill", fill_value=0)
+    vv = jnp.take(victims, gidx, axis=1, mode="fill", fill_value=0)
+    dd = jnp.take(drain, gidx, axis=1, mode="fill", fill_value=0)
+    ns = ns.at[NS_NODE_ID].set(gidx)
+    cls = _fused_class_core(ns, vv, dd, thresh, ng, nc, cpb, alpha,
+                            spec=spec, m=NARROW_M, narrow_gate=False)
+    win = _fused_argmax_core(ns[NS_NODE_ID], cls, alpha)
+    placed = winner_place(win, ns[NS_FREE_GPU], ns[NS_FREE_CG],
+                          vv[VF_GPU], vv[VF_CG], ng, nc, cpb, spec=spec)
+    found = win[0] > 0
+    tier_vals = jnp.asarray(tuple(TIER_SCORES), jnp.float32)
+    pp = win[4]
+    prio_term = jnp.where(pp > 0,
+                          1.0 / jnp.maximum(pp, 1).astype(jnp.float32), 1.0)
+    wscore = alpha * prio_term + (1.0 - alpha) * tier_vals[win[2]]
+    certain = jnp.where(found, wscore > excl_ub,
+                        excl_ub == jnp.float32(-jnp.inf))
+    node_id = jnp.where(found, gidx[win[1]], jnp.int32(-1))
+    return jnp.concatenate([placed, jnp.stack([node_id,
+                                               certain.astype(jnp.int32)])])
+
+
+def _shortlist_pipeline(nodestate, victims, drain, rep, aux, pbuf,
+                        thresh, ng, nc, cpb, alpha, *, spec, k, p, f):
+    """Overlay ``p`` patch rows, force ``f`` rep-mask corrections (patched
+    rows carry stale fingerprints: the rows themselves plus the promoted
+    lowest unpatched member of each patched row's old class), then the
+    two-stage `_shortlist_winner` — one dispatch, one small readback."""
+    if p:
+        nodestate, victims, drain = _overlay(nodestate, victims, drain,
+                                             aux[:p], pbuf)
+    if f:
+        rep = rep.at[aux[p:p + f]].set(True, mode="drop")
+    return _shortlist_winner(nodestate, victims, drain, rep,
+                             thresh, ng, nc, cpb, alpha, spec=spec, k=k)
+
+
+def _shortlist_plan2_pipeline(nodestate, victims, drain, rep, aux, pbuf,
+                              thresh, ng, nc, cpb, alpha, *, spec, k, p, f):
+    """`_plan2_pipeline`'s shortlisted twin: normal cycle first, the
+    two-stage preemptive chain only under ``lax.cond`` when it found
+    nothing.  Returns int32[5 + `WIN_FIELDS` + 2]."""
+    if p:
+        nodestate, victims, drain = _overlay(nodestate, victims, drain,
+                                             aux[:p], pbuf)
+    if f:
+        rep = rep.at[aux[p:p + f]].set(True, mode="drop")
+    norm = normal_cycle_core(nodestate, ng, nc, cpb, spec=spec)
+
+    def _skip(_):
+        return jnp.zeros(WIN_FIELDS + 2, jnp.int32)
+
+    def _preempt(_):
+        return _shortlist_winner(nodestate, victims, drain, rep,
+                                 thresh, ng, nc, cpb, alpha,
+                                 spec=spec, k=k)
+
+    pre = jax.lax.cond(norm[0] > 0, _skip, _preempt, None)
+    return jnp.concatenate([norm, pre])
+
+
+@lru_cache(maxsize=None)
+def shortlist_evaluator(spec: ServerSpec, k: int, p: int, f: int,
+                        thresh: int, ng: int, nc: int, cpb: int,
+                        alpha: float):
+    """jit of `_shortlist_pipeline`, request baked in as in
+    `resident_evaluator`."""
+
+    def fn(nodestate, victims, drain, rep, aux, pbuf):
+        return _shortlist_pipeline(nodestate, victims, drain, rep, aux,
+                                   pbuf, thresh, ng, nc, cpb, alpha,
+                                   spec=spec, k=k, p=p, f=f)
+
+    return jax.jit(fn)
+
+
+@lru_cache(maxsize=None)
+def shortlist_plan_evaluator(spec: ServerSpec, k: int, p: int, f: int,
+                             thresh: int, ng: int, nc: int, cpb: int,
+                             alpha: float):
+    """jit of `_shortlist_plan2_pipeline` — the shortlisted
+    ``schedule_or_preempt`` hot path in one dispatch."""
+
+    def fn(nodestate, victims, drain, rep, aux, pbuf):
+        return _shortlist_plan2_pipeline(nodestate, victims, drain, rep,
+                                         aux, pbuf, thresh, ng, nc, cpb,
+                                         alpha, spec=spec, k=k, p=p, f=f)
+
+    return jax.jit(fn)
+
+
 @lru_cache(maxsize=None)
 def batch_class_evaluator(spec: ServerSpec, m: int, alpha: float):
     """jit(vmap) of the class core over a REQUEST axis: one dispatch
@@ -1215,9 +1426,64 @@ def _fast_plan_args(dcs: DeviceClusterState, patches: dict, thresh: int,
     return split, g, aux_d, pbuf_d
 
 
+def _forced_rows(dcs: DeviceClusterState, patches) -> list[int]:
+    """Rep-mask corrections for view-delta patch rows.
+
+    The device rep mask is computed from the MIRROR's fingerprints, but
+    patch rows are overlaid with different content in-dispatch, so (a)
+    every patched row must be treated as its own (possibly new) class —
+    forced into the rep set — and (b) a patched row may have been the
+    representative of its old class, orphaning the unpatched members:
+    promote the lowest unpatched member of each patched row's old class.
+    Extra representatives only add rows to the prescreen (harmless for
+    exactness); only a MISSING representative could hide the argmax, and
+    these two corrections close exactly the ways one can go missing.
+    Pending rows (``sync(flush=False)`` leftovers) need nothing: their
+    mirror fingerprints are fresh, so the rep assignment already matches
+    the content the overlay installs.
+    """
+    pset = {int(n) for n in patches} if patches else set()
+    if not pset:
+        return []
+    fp = dcs.mirror.fp
+    forced = set(pset)
+    for d in pset:
+        for mbr in np.nonzero(fp == fp[d])[0]:
+            if int(mbr) not in pset:
+                forced.add(int(mbr))
+                break
+    return sorted(forced)
+
+
+def _shortlist_plan_args(dcs: DeviceClusterState, patches, thresh: int,
+                         p: int, pidx, pbuf):
+    """`_fast_plan_args`'s shortlist twin: wide/overflow routing split +
+    forced-rep indices + the combined aux upload, cached per preemptor
+    priority while the state version holds (the delta-free steady state
+    pays two dict probes per plan: this and `rep_classes`)."""
+    cached = dcs.plan_cache.get(("shortlist", thresh)) if p == 0 else None
+    if cached is not None and cached[0] == dcs.version:
+        return cached[1:]
+    # gate=NARROW_M: the shortlist's stage 2 always runs NARROW_M wide, so
+    # only genuinely wide (elig > NARROW_M) and overflow rows route out
+    split = split_fused_nodes(dcs, patches, thresh, gate=NARROW_M)
+    forced = _forced_rows(dcs, patches)
+    fidx = _pad_idx(forced) if forced else np.zeros(0, np.int32)
+    f = len(fidx)
+    if p == 0 and f == 0:
+        aux_d, pbuf_d = _empty_patch_args(dcs.cap)
+    else:
+        aux_d = jnp.asarray(np.concatenate([pidx, fidx]))
+        pbuf_d = jnp.asarray(pbuf)
+    if p == 0:
+        dcs.plan_cache[("shortlist", thresh)] = (dcs.version, split, f,
+                                                 aux_d, pbuf_d)
+    return split, f, aux_d, pbuf_d
+
+
 def source_candidates_fused(
     cluster, workload: WorkloadSpec, nodes: list[int] | None = None,
-    alpha: float = DEFAULT_ALPHA,
+    alpha: float = DEFAULT_ALPHA, shortlist: ShortlistConfig | None = None,
 ) -> list[Candidate]:
     """Fused cluster-wide IMP over the device-resident state.
 
@@ -1258,22 +1524,44 @@ def source_candidates_fused(
     pargs = None     # (pidx, pbuf) on device, built on first gathered use
     pending = []     # dispatches are async: launch all, decode once
     if nodes is None:
-        # the whole pipeline — overlay, Filtering, m_res-wide subsets over
-        # ALL rows, the gathered mid tier, and the Eq. 2 argmax — is ONE
-        # dispatch; indices travel as one aux upload (cached with the
-        # routing split while the state version holds)
-        split, g, aux_d, pbuf_d = _fast_plan_args(dcs, patches, thresh,
-                                                  p, pidx, pbuf)
-        mid = split.mid
-        out = CandidateShortlist(_overflow_candidates(cluster, workload,
-                                                      split.overflow))
-        out.n_candidates = len(out)
-        res = ev.resident_evaluator(spec, split.m_res, p, g, *req)(
-            dcs.nodestate, dcs.victims, dcs.drain, aux_d, pbuf_d)
-        n = dcs.n_rows
-        sel = {n + j: node for j, node in enumerate(mid)} if mid else None
-        pending.append((res, sel))
-        mid = []     # consumed by the combined dispatch
+        sl_vals = None
+        if shortlist is not None and dcs.n_rows > shortlist.k:
+            # stage 1+2 shortlist dispatch; the decoded certainty flag
+            # decides whether the full sweep is still required
+            split, f, aux_d, pbuf_d = _shortlist_plan_args(
+                dcs, patches, thresh, p, pidx, pbuf)
+            rep_dev = dcs.rep_classes()[1]
+            res = ev.shortlist_evaluator(spec, shortlist.k, p, f, *req)(
+                dcs.nodestate, dcs.victims, dcs.drain, rep_dev,
+                aux_d, pbuf_d)
+            vals = [int(x) for x in jax.device_get(res)]
+            if vals[-1] or shortlist.mode != "guaranteed":
+                sl_vals = vals
+        if sl_vals is not None:
+            mid = []     # absorbed: stage 2 always runs NARROW_M wide
+            out = CandidateShortlist(_overflow_candidates(
+                cluster, workload, split.overflow))
+            out.n_candidates = len(out)
+            pending.append((np.asarray(sl_vals[:WIN_FIELDS], np.int32),
+                            {sl_vals[1]: sl_vals[WIN_FIELDS]}))
+        else:
+            # the whole pipeline — overlay, Filtering, m_res-wide subsets
+            # over ALL rows, the gathered mid tier, and the Eq. 2 argmax —
+            # is ONE dispatch; indices travel as one aux upload (cached
+            # with the routing split while the state version holds)
+            split, g, aux_d, pbuf_d = _fast_plan_args(dcs, patches, thresh,
+                                                      p, pidx, pbuf)
+            mid = split.mid
+            out = CandidateShortlist(_overflow_candidates(cluster, workload,
+                                                          split.overflow))
+            out.n_candidates = len(out)
+            res = ev.resident_evaluator(spec, split.m_res, p, g, *req)(
+                dcs.nodestate, dcs.victims, dcs.drain, aux_d, pbuf_d)
+            n = dcs.n_rows
+            sel = ({n + j: node for j, node in enumerate(mid)}
+                   if mid else None)
+            pending.append((res, sel))
+            mid = []     # consumed by the combined dispatch
     else:
         split = split_fused_nodes(dcs, patches, thresh, nodes)
         mid = split.mid
@@ -1391,8 +1679,53 @@ def _finalize_plan(vals, sel, patches, ctx, shortlist_fn, wide_chunks_fn,
         chosen.victims, out.n_candidates)
 
 
+def _plan_fused_shortlist(cluster, workload: WorkloadSpec,
+                          dcs: DeviceClusterState, ev, ctx, patches,
+                          p: int, pidx, pbuf, alpha: float,
+                          shortlist: ShortlistConfig):
+    """The shortlisted chained plan: one `_shortlist_plan2_pipeline`
+    dispatch + decode.  Returns None when the certainty check failed in
+    guaranteed mode — the caller then re-dispatches the full sweep (the
+    resident tensors and patch buffers are already in place, so the
+    fallback costs one extra dispatch, no host rework)."""
+    spec = cluster.spec
+    thresh = workload.priority
+    ng, nc, cpb = _req_scalars(spec, workload)
+    req = (thresh, ng, nc, cpb, float(alpha))
+    split, f, aux_d, pbuf_d = _shortlist_plan_args(dcs, patches, thresh,
+                                                   p, pidx, pbuf)
+    rep_dev = dcs.rep_classes()[1]
+    res = ev.shortlist_plan_evaluator(spec, shortlist.k, p, f, *req)(
+        dcs.nodestate, dcs.victims, dcs.drain, rep_dev, aux_d, pbuf_d)
+    vals = [int(x) for x in jax.device_get(res)]
+    if (not vals[0] and not vals[-1]
+            and shortlist.mode == "guaranteed"):
+        return None
+    # the argmax row indexes the gathered K axis; the readback carries the
+    # real node id alongside
+    sel = {vals[6]: vals[5 + WIN_FIELDS]}
+
+    def shortlist_out():
+        out = CandidateShortlist(_overflow_candidates(cluster, workload,
+                                                      split.overflow))
+        out.n_candidates = len(out)
+        return out
+
+    def wide_chunks():
+        for lo in range(0, len(split.wide), MAX_ROWS_WIDE):
+            chunk = split.wide[lo:lo + MAX_ROWS_WIDE]
+            yield ev.gathered_evaluator(spec, ctx.cap, p, *req)(
+                dcs.nodestate, dcs.victims, dcs.drain,
+                jnp.asarray(pidx), jnp.asarray(pbuf),
+                jnp.asarray(_pad_idx(chunk))), chunk
+
+    return _finalize_plan(vals[:5 + WIN_FIELDS], sel, patches, ctx,
+                          shortlist_out, wide_chunks, float(alpha))
+
+
 def plan_fused(cluster, workload: WorkloadSpec, alpha: float = DEFAULT_ALPHA,
-               allow_preempt: bool = True) -> FusedPlanResult:
+               allow_preempt: bool = True,
+               shortlist: ShortlistConfig | None = None) -> FusedPlanResult:
     """BOTH cycles of Algorithm 1 as one device dispatch (engine hook for
     ``fused_place`` scheduling).
 
@@ -1404,6 +1737,12 @@ def plan_fused(cluster, workload: WorkloadSpec, alpha: float = DEFAULT_ALPHA,
     (9..16-eligible) rows re-dispatch chunked afterwards and truncated
     overflow rows fall back to per-node python, exactly like
     `source_candidates_fused`.
+
+    With a `ShortlistConfig` (and more rows than ``k``) the preemptive
+    chain runs the two-stage shortlist program instead: equivalence-class
+    + top-K prescreen, exact sweep over K gathered rows.  In guaranteed
+    mode a failed certainty check falls back to the full sweep below, so
+    decisions stay bit-identical to ``shortlist=None``.
     """
     if not allow_preempt:
         got = plan_normal_fused(cluster, workload)
@@ -1419,6 +1758,13 @@ def plan_fused(cluster, workload: WorkloadSpec, alpha: float = DEFAULT_ALPHA,
     ng, nc, cpb = _req_scalars(spec, workload)
     patches = _view_patches_of(cluster, dcs)
     p, pidx, pbuf = _patch_args(dcs, patches)
+    if shortlist is not None and dcs.n_rows > shortlist.k:
+        got = _plan_fused_shortlist(cluster, workload, dcs, ev, ctx,
+                                    patches, p, pidx, pbuf, alpha,
+                                    shortlist)
+        if got is not None:
+            return got
+        # guaranteed-mode certainty check failed: full sweep decides
     split, g, aux_d, pbuf_d = _fast_plan_args(dcs, patches, thresh,
                                               p, pidx, pbuf)
     mid = split.mid
@@ -1710,7 +2056,8 @@ def persistent_batch_session(cluster: Cluster, workloads,
 
 
 def warmup_fused(cluster: Cluster, alpha: float = DEFAULT_ALPHA,
-                 batch: int = 8, workloads=None) -> None:
+                 batch: int = 8, workloads=None,
+                 shortlist: ShortlistConfig | None = None) -> None:
     """Pre-compile the fused jit buckets for this cluster's shapes.
 
     Opt-in via ``TopoScheduler(..., warmup=True)``: drives REAL sourcing
@@ -1736,6 +2083,8 @@ def warmup_fused(cluster: Cluster, alpha: float = DEFAULT_ALPHA,
         source_candidates_fused(cluster, wl, None, alpha=alpha)
         plan_fused(cluster, wl, alpha=alpha)       # chained Algorithm 1
         plan_normal_fused(cluster, wl)             # batch-path normal cycle
+        if shortlist is not None:
+            plan_fused(cluster, wl, alpha=alpha, shortlist=shortlist)
         view = cluster.view()
         for node in range(cluster.num_nodes):    # fabricate one view delta
             victims = view.victims_on(node, wl.priority)
@@ -1744,6 +2093,8 @@ def warmup_fused(cluster: Cluster, alpha: float = DEFAULT_ALPHA,
                 source_candidates_fused(view, wl, None, alpha=alpha)
                 plan_fused(view, wl, alpha=alpha)
                 plan_normal_fused(view, wl)
+                if shortlist is not None:
+                    plan_fused(view, wl, alpha=alpha, shortlist=shortlist)
                 break
     if batch > 1 and workloads:
         session = BatchSourcingSession(
@@ -1753,6 +2104,16 @@ def warmup_fused(cluster: Cluster, alpha: float = DEFAULT_ALPHA,
 
 
 register_engine("imp_batched", batched=True, needs_alpha=True,
+                fused_filter=True, fused_place=True, plan_fn=plan_fused,
+                normal_fn=plan_normal_fused,
+                batch_factory=persistent_batch_session,
+                warmup_fn=warmup_fused,
+                supports_shortlist=True)(source_candidates_fused)
+
+# full-sweep parity oracle: identical functions, shortlist disabled — the
+# scheduler's shortlist kwargs are ignored, every plan runs the all-rows
+# subset sweep (tests/benchmarks compare decisions against this engine)
+register_engine("imp_batched_full", batched=True, needs_alpha=True,
                 fused_filter=True, fused_place=True, plan_fn=plan_fused,
                 normal_fn=plan_normal_fused,
                 batch_factory=persistent_batch_session,

@@ -88,8 +88,17 @@ from .engines import (EngineName, SourcingEngine, get_engine,
                       registered_engines)
 from .placement import (INFEASIBLE, Placement, best_tier, is_topology_hit,
                         place, place_blind)
+from .preemption_jax import ShortlistConfig
 from .scoring import DEFAULT_ALPHA, Candidate
 from .workload import TopoPolicy, WorkloadSpec
+
+#: ``engine="auto"`` node-count routing threshold: below it the
+#: single-device fused engine wins (the mesh-sharded engine pays a fixed
+#: cross-shard dispatch floor — the committed 24-node scale rows show
+#: ~9.0ms sharded vs ~1.1ms batched plan-e2e P50); at or above it the
+#: sharded node axis pays for itself.  Override per scheduler with
+#: ``TopoScheduler(..., auto_threshold=...)``.
+AUTO_ENGINE_THRESHOLD = 4096
 
 
 class _LazyBatchSession:
@@ -128,6 +137,31 @@ class _LazyBatchSession:
 
 
 class TopoScheduler:
+    """Algorithm 1 scheduler over a pluggable sourcing engine (module
+    docstring above for the pipeline).
+
+    Engine selection: pass a registered engine name, or ``engine="auto"``
+    to route by cluster size — ``imp_batched`` below ``auto_threshold``
+    nodes (default `AUTO_ENGINE_THRESHOLD`), ``imp_sharded`` at or above
+    it.  The resolved name is in ``self.engine``; every decision carries
+    the routing in ``sourcing_provenance``.
+
+    Shortlist sourcing knobs (engines registered with
+    ``supports_shortlist`` — ``imp_batched``/``imp_sharded``; the
+    ``*_full`` oracles and host engines ignore them):
+
+    * ``shortlist_k`` — representative rows the stage-1 equivalence-class
+      prescreen keeps for the exact stage-2 subset sweep (0 disables the
+      shortlist entirely).  Only active when the cluster has more rows
+      than ``k``.
+    * ``shortlist_mode`` — ``"guaranteed"`` (default) re-dispatches the
+      full sweep whenever the admissible-bound certainty check cannot
+      prove the shortlist winner globally optimal, keeping decisions
+      bit-identical to the full sweep; ``"best_effort"`` returns the
+      fixed-K winner regardless, capping plan latency for admission
+      control.
+    """
+
     def __init__(
         self,
         cluster: Cluster,
@@ -135,11 +169,33 @@ class TopoScheduler:
         alpha: float = DEFAULT_ALPHA,
         topology_aware_placement: bool | None = None,
         warmup: bool = False,
+        shortlist_k: int = 128,
+        shortlist_mode: str = "guaranteed",
+        auto_threshold: int | None = None,
     ) -> None:
         self.cluster = cluster
+        self.auto_threshold = (AUTO_ENGINE_THRESHOLD if auto_threshold is None
+                               else auto_threshold)
+        self._auto = engine == "auto"
+        if self._auto:
+            engine = ("imp_batched"
+                      if cluster.num_nodes < self.auto_threshold
+                      else "imp_sharded")
         self.engine: EngineName = engine
         self._engine: SourcingEngine = get_engine(engine)
         self.alpha = alpha
+        self.shortlist = (
+            ShortlistConfig(k=shortlist_k, mode=shortlist_mode)
+            if (shortlist_k > 0
+                and getattr(self._engine, "supports_shortlist", False))
+            else None)
+        self._provenance = {
+            "engine": engine, "auto": self._auto,
+            "auto_threshold": self.auto_threshold,
+            "shortlist_k": (self.shortlist.k if self.shortlist else 0),
+            "shortlist_mode": (self.shortlist.mode if self.shortlist
+                               else None),
+        }
         # engines that fuse Guaranteed Filtering into their dispatch get
         # nodes=None and the host filter loop is skipped entirely
         self._fused_filter = bool(getattr(self._engine, "fused_filter",
@@ -173,7 +229,10 @@ class TopoScheduler:
         if warmup:
             warm = getattr(self._engine, "warmup", None)
             if callable(warm):
-                warm(cluster, self.alpha)
+                if self.shortlist is not None:
+                    warm(cluster, self.alpha, shortlist=self.shortlist)
+                else:
+                    warm(cluster, self.alpha)
 
     # ---- commit/rollback observers ------------------------------------------------
     def add_listener(self, fn: Callable[[SchedulingDecision, str], None]) -> None:
@@ -294,8 +353,13 @@ class TopoScheduler:
             # Guaranteed Filtering runs inside the engine's dispatch over
             # the device-resident state: no host node loop, nodes=None
             t0 = time.perf_counter()
-            candidates = self._engine.source_all(view, workload, None,
-                                                 alpha=self.alpha)
+            if self.shortlist is not None:
+                candidates = self._engine.source_all(
+                    view, workload, None, alpha=self.alpha,
+                    shortlist=self.shortlist)
+            else:
+                candidates = self._engine.source_all(view, workload, None,
+                                                     alpha=self.alpha)
         else:
             nodes = self._guaranteed_filter(workload, view)
             if not nodes:
@@ -363,6 +427,10 @@ class TopoScheduler:
         t0 = time.perf_counter()
         if session is not None:
             res = session.plan(view, workload, index)
+        elif self.shortlist is not None:
+            res = self._engine.plan_fused(view, workload, self.alpha,
+                                          allow_preempt,
+                                          shortlist=self.shortlist)
         else:
             res = self._engine.plan_fused(view, workload, self.alpha,
                                           allow_preempt)
@@ -432,6 +500,7 @@ class TopoScheduler:
                     workload, view, session=_session, index=_index)
         if decision is None:
             decision = SchedulingDecision(kind="rejected", workload=workload)
+        decision.sourcing_provenance = dict(self._provenance)
         return Transaction(cluster=self.cluster, decision=decision,
                            on_event=self._notify, view=view,
                            planned_uid=planned_uid)

@@ -1,0 +1,329 @@
+"""Equivalence-class + top-K shortlist sourcing: decision parity vs the
+full sweep, fingerprint/representative maintenance, and mode semantics.
+
+The shortlisted path must be *bit-identical* to the exact all-nodes subset
+sweep in guaranteed mode — every test here pins that against the
+``*_full`` oracle engines (same code with the shortlist front-end off).
+``shortlist_k`` is forced tiny (4–8) so the prescreen actually prunes on
+clusters far below the production default of 128.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (Cluster, ColocationConfig, ShortlistConfig, SPECS,
+                        TopoScheduler, run_day_cycle, table3_workloads)
+from repro.core.cluster import SourcingContext
+from repro.core.placement import Placement
+from repro.core.simulator import SimConfig, build_saturated_cluster
+from repro.core.workload import WorkloadSpec
+
+WL3 = {w.name: w for w in table3_workloads()}
+
+
+def _decision_key(dec):
+    return (dec.kind, dec.node, dec.victims,
+            None if dec.placement is None else dec.placement.tier,
+            dec.hit)
+
+
+def _sat(num_nodes=24, seed=0):
+    return build_saturated_cluster(SimConfig(num_nodes=num_nodes, seed=seed))
+
+
+def _random_cluster(seed: int, spec, nodes: int = 6) -> Cluster:
+    rng = random.Random(seed)
+    cluster = Cluster(spec, nodes)
+    for node in range(nodes):
+        free = list(range(min(8, spec.num_gpus)))
+        rng.shuffle(free)
+        while free:
+            if len(free) >= 2 and rng.random() < 0.4:
+                g = [free.pop(), free.pop()]
+                wl = WL3["C"]
+            else:
+                g = [free.pop()]
+                wl = WL3["D"]
+            if rng.random() < 0.2:
+                continue
+            mask = sum(1 << x for x in g)
+            cluster.bind(wl, node, Placement(mask, mask, 0))
+    return cluster
+
+
+# ---------------------------------------------------------------------------------
+# Guaranteed-mode decision parity vs the full-sweep oracle
+# ---------------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 3, 11, 42])
+@pytest.mark.parametrize("wl_name", ["A", "B", "C"])
+def test_shortlist_single_plan_parity(seed, wl_name):
+    decs = {}
+    for engine, k in (("imp_batched", 6), ("imp_batched_full", 0)):
+        sched = TopoScheduler(_sat(seed=seed), engine=engine, shortlist_k=k)
+        decs[engine] = _decision_key(
+            sched.plan(WL3[wl_name], allow_normal=False).decision)
+    assert len(set(decs.values())) == 1, (seed, wl_name, decs)
+
+
+@pytest.mark.parametrize("alpha", [0.0, 0.3, 0.5, 1.0])
+def test_shortlist_parity_across_alpha(alpha):
+    """The prescreen upper bound folds alpha into both of its terms; sweep
+    it so tie-heavy regimes (alpha=0 and 1) hit the certainty check."""
+    for seed in (1, 9):
+        decs = {}
+        for engine, k in (("imp_batched", 4), ("imp_batched_full", 0)):
+            sched = TopoScheduler(_sat(seed=seed), engine=engine,
+                                  alpha=alpha, shortlist_k=k)
+            decs[engine] = _decision_key(
+                sched.plan(WL3["B"], allow_normal=False).decision)
+        assert len(set(decs.values())) == 1, (seed, alpha, decs)
+
+
+@pytest.mark.parametrize("spec_name", sorted(SPECS))
+def test_shortlist_parity_across_skus(spec_name):
+    """Every SKU: the popcount tier tables baked into the prescreen must
+    match the exact sweep's on all three server shapes.  Workloads are
+    sized per-SKU (cores must be CoreGroup multiples)."""
+    spec = SPECS[spec_name]
+    cg = spec.coregroup_size
+    victim = WorkloadSpec("v", priority=100, gpus_per_instance=1,
+                          cores_per_instance=cg, preemptible=True)
+    preemptor = WorkloadSpec("P", priority=1000, gpus_per_instance=2,
+                             cores_per_instance=2 * cg, preemptible=False)
+    rng = random.Random(7)
+
+    def build():
+        cluster = Cluster(spec, 6)
+        for node in range(6):
+            for g in range(spec.num_gpus):
+                if rng.random() < 0.2:
+                    continue
+                cluster.bind(victim, node, Placement(1 << g, 1 << g, 0))
+        return cluster
+
+    state = rng.getstate()
+    decs = {}
+    for engine, k in (("imp_batched", 4), ("imp_batched_full", 0)):
+        rng.setstate(state)
+        sched = TopoScheduler(build(), engine=engine, shortlist_k=k)
+        decs[engine] = _decision_key(
+            sched.plan(preemptor, allow_normal=False).decision)
+    assert len(set(decs.values())) == 1, (spec_name, decs)
+
+
+def test_shortlist_parity_across_commit_sequences():
+    """Commits mutate fingerprints incrementally; the rep set and prescreen
+    must track them and keep agreeing with the full sweep."""
+    seqs = {}
+    for engine, k in (("imp_batched", 6), ("imp_batched_full", 0)):
+        sched = TopoScheduler(_sat(seed=2), engine=engine, shortlist_k=k)
+        seq = []
+        for name in ("B", "C", "B", "B", "C", "B"):
+            txn = sched.plan(WL3[name])
+            seq.append(_decision_key(txn.decision))
+            if txn.decision.kind != "rejected":
+                txn.commit()
+        seqs[engine] = seq
+    assert seqs["imp_batched"] == seqs["imp_batched_full"]
+
+
+def test_shortlist_parity_across_rollback():
+    """Rollback restores prior placements with the original uids; the
+    refreshed fingerprints must return to the pre-commit classes and the
+    replans must match the oracle exactly."""
+    seqs = {}
+    for engine, k in (("imp_batched", 6), ("imp_batched_full", 0)):
+        sched = TopoScheduler(_sat(seed=4), engine=engine, shortlist_k=k)
+        seq = []
+        txn = sched.plan(WL3["B"], allow_normal=False)
+        seq.append(_decision_key(txn.decision))
+        txn.commit()
+        txn.rollback()
+        for name in ("B", "C", "B"):
+            t = sched.plan(WL3[name])
+            seq.append(_decision_key(t.decision))
+            if t.decision.kind != "rejected":
+                t.commit()
+        seqs[engine] = seq
+    assert seqs["imp_batched"] == seqs["imp_batched_full"]
+
+
+def test_shortlist_parity_in_plan_batch():
+    """Batch sessions route patched (view-delta) nodes through the forced-
+    row promotion: each patched node and a surviving member of its old
+    class join the rep set, so the prescreen stays exact mid-batch."""
+    batch = [WL3[n] for n in ("B", "B", "C", "B", "C", "B")]
+    keys = {}
+    for engine, k in (("imp_batched", 6), ("imp_batched_full", 0)):
+        sched = TopoScheduler(_sat(seed=6), engine=engine, shortlist_k=k)
+        keys[engine] = [_decision_key(t.decision)
+                        for t in sched.plan_batch(batch)]
+    assert keys["imp_batched"] == keys["imp_batched_full"]
+
+
+def test_shortlist_parity_plan_batch_with_commits():
+    seqs = {}
+    for engine, k in (("imp_batched", 6), ("imp_batched_full", 0)):
+        sched = TopoScheduler(_sat(seed=8), engine=engine, shortlist_k=k)
+        seq = []
+        for names in (("B", "C", "B"), ("C", "B", "B")):
+            txns = sched.plan_batch([WL3[n] for n in names])
+            for t in txns:
+                if t.decision.kind != "rejected":
+                    t.commit()
+            seq.extend(_decision_key(t.decision) for t in txns)
+        seqs[engine] = seq
+    assert seqs["imp_batched"] == seqs["imp_batched_full"]
+
+
+def test_shortlist_sharded_parity():
+    """imp_sharded with the shard-local prescreen vs its full-sweep twin
+    (runs on however many devices the host exposes, including one)."""
+    seqs = {}
+    for engine, k in (("imp_sharded", 6), ("imp_sharded_full", 0)):
+        sched = TopoScheduler(_sat(seed=5), engine=engine, shortlist_k=k)
+        seq = []
+        for name in ("B", "C", "B", "C"):
+            txn = sched.plan(WL3[name])
+            seq.append(_decision_key(txn.decision))
+            if txn.decision.kind != "rejected":
+                txn.commit()
+        seq.extend(_decision_key(t.decision)
+                   for t in sched.plan_batch([WL3["B"]] * 4))
+        seqs[engine] = seq
+    assert seqs["imp_sharded"] == seqs["imp_sharded_full"]
+
+
+# ---------------------------------------------------------------------------------
+# Fingerprints and equivalence classes
+# ---------------------------------------------------------------------------------
+
+def test_fingerprint_incremental_matches_fresh():
+    """After arbitrary commits, the incrementally-maintained fingerprints
+    must equal a from-scratch rebuild's (same O(delta) invariant the rest
+    of SourcingContext pins)."""
+    cluster = _sat(seed=3)
+    ctx = cluster.sourcing_context()
+    ctx.refresh()
+    sched = TopoScheduler(cluster, engine="imp_batched", shortlist_k=6)
+    for name in ("B", "C", "B", "C"):
+        txn = sched.plan(WL3[name])
+        if txn.decision.kind != "rejected":
+            txn.commit()
+    ctx.refresh()
+    fresh = SourcingContext(cluster)
+    fresh.refresh()
+    assert np.array_equal(ctx.fp, fresh.fp)
+
+
+def test_fingerprint_identical_rows_collide_only_when_identical():
+    """Nodes with identical resident rows share a fingerprint; binding one
+    instance anywhere splits that node out of its class."""
+    cluster = Cluster(SPECS["rtx4090"], 8)
+    ctx = cluster.sourcing_context()
+    ctx.refresh()
+    assert len(set(ctx.fp.tolist())) == 1  # all-empty nodes: one class
+    cluster.bind(WL3["D"], 3, Placement(1, 1, 0))
+    ctx.refresh()
+    fps = ctx.fp.tolist()
+    assert len(set(fps)) == 2
+    assert fps.count(fps[3]) == 1
+
+
+def test_rep_classes_one_lowest_index_rep_per_class():
+    cluster = _random_cluster(1, SPECS["rtx4090"], nodes=10)
+    dcs = cluster.device_state().sync()
+    rep, rep_dev = dcs.rep_classes()
+    n = cluster.num_nodes
+    fp = dcs.mirror.fp[:n]
+    # exactly one rep per distinct fingerprint, and it's the lowest index
+    assert int(rep[:n].sum()) == len(set(fp.tolist()))
+    for v in set(fp.tolist()):
+        members = np.nonzero(fp == v)[0]
+        assert rep[members[0]] and not rep[members[1:]].any()
+    # cache: same version -> same arrays; new version -> recomputed
+    rep2, _ = dcs.rep_classes()
+    assert rep2 is rep
+    free = [(nd, cluster.free_masks(nd)) for nd in range(n)]
+    node, (fg, fc) = next((nd, m) for nd, m in free if m[0] & m[1])
+    bit = (fg & fc) & -(fg & fc)     # lowest jointly-free GPU/CG pair
+    cluster.bind(WL3["D"], node, Placement(bit, bit, 0))
+    dcs.sync()
+    rep3, _ = dcs.rep_classes()
+    assert rep3 is not rep
+
+
+# ---------------------------------------------------------------------------------
+# Modes, knobs, routing
+# ---------------------------------------------------------------------------------
+
+def test_shortlist_best_effort_mode_returns_valid_plans():
+    """Best-effort skips the certainty fallback: decisions must still be
+    executable (commit cleanly), just not necessarily sweep-identical."""
+    sched = TopoScheduler(_sat(seed=0), engine="imp_batched",
+                          shortlist_k=4, shortlist_mode="best_effort")
+    for name in ("B", "C", "B"):
+        txn = sched.plan(WL3[name])
+        if txn.decision.kind != "rejected":
+            dec = txn.commit()
+            assert dec.instance is not None
+
+
+def test_shortlist_disabled_below_k():
+    """Clusters at or below K rows skip the prescreen entirely (nothing to
+    prune) — construction must not fail and plans must match the oracle."""
+    a = TopoScheduler(_sat(num_nodes=8, seed=0), engine="imp_batched",
+                      shortlist_k=128)
+    b = TopoScheduler(_sat(num_nodes=8, seed=0), engine="imp_batched_full")
+    assert (_decision_key(a.plan(WL3["B"]).decision)
+            == _decision_key(b.plan(WL3["B"]).decision))
+
+
+def test_shortlist_config_validation():
+    with pytest.raises(ValueError):
+        ShortlistConfig(k=128, mode="bogus")
+    with pytest.raises(ValueError):
+        ShortlistConfig(k=0)
+
+
+def test_auto_engine_resolves_by_node_count():
+    lo = TopoScheduler(_sat(num_nodes=8, seed=0), engine="auto")
+    assert lo._provenance["engine"] == "imp_batched"
+    assert lo._provenance["auto"] is True
+    hi = TopoScheduler(_sat(num_nodes=24, seed=0), engine="auto",
+                       auto_threshold=16)
+    assert hi._provenance["engine"] == "imp_sharded"
+    assert hi._provenance["auto_threshold"] == 16
+
+
+def test_decision_carries_sourcing_provenance():
+    sched = TopoScheduler(_sat(num_nodes=8, seed=0), engine="auto",
+                          shortlist_k=64, shortlist_mode="guaranteed")
+    dec = sched.plan(WL3["B"]).decision
+    prov = dec.sourcing_provenance
+    assert prov["engine"] == "imp_batched" and prov["auto"] is True
+    assert prov["shortlist_k"] == 64
+    assert prov["shortlist_mode"] == "guaranteed"
+    # provenance is excluded from equality: parity comparisons stay valid
+    assert "sourcing_provenance" not in repr(dec)
+
+
+# ---------------------------------------------------------------------------------
+# Day cycle under the shortlist front-end
+# ---------------------------------------------------------------------------------
+
+def test_day_cycle_guaranteed_shortlist_matches_full_sweep():
+    """A short seeded day-cycle segment: guaranteed-mode shortlisting must
+    reproduce the full sweep's day bit-for-bit (same preemptions, hits,
+    placements, scheduled perf)."""
+    base = dict(num_nodes=12, seed=7, horizon_hours=4.0, warmup=False,
+                shortlist_k=6)
+    sl = run_day_cycle(ColocationConfig(engine="imp_batched", **base))
+    full = run_day_cycle(ColocationConfig(engine="imp_batched_full", **base))
+    assert sl.preemptions == full.preemptions
+    assert sl.hits == full.hits
+    assert sl.placements == full.placements
+    assert sl.scheduled_perf == pytest.approx(full.scheduled_perf)
+    assert sl.offline_goodput == pytest.approx(full.offline_goodput)
