@@ -16,10 +16,29 @@ paper-scale protocol (100 nodes, 100x50 preemptions).
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run",
+        description="Run every benchmark; the co-location day cycle "
+                    "accepts size/horizon/seed overrides")
+    ap.add_argument("--nodes", type=int, default=None,
+                    help="co-location cluster size override (forwarded to "
+                         "bench_colocation; overridden runs don't rewrite "
+                         "the committed BENCH JSON)")
+    ap.add_argument("--hours", type=float, default=24.0,
+                    help="co-location day-cycle horizon in simulated hours")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="co-location arrival-stream / placement seed")
+    ap.add_argument("--skip-scale", action="store_true",
+                    help="skip the co-location O(delta) scale sweep")
+    args = ap.parse_args(argv)
+    overridden = (args.nodes is not None or args.hours != 24.0
+                  or args.seed != 0)
+
     from . import (bench_allocation_snapshot, bench_colocation,
                    bench_elastic, bench_hit_rate, bench_instance_timeline,
                    bench_roofline, bench_scale_sourcing,
@@ -34,7 +53,12 @@ def main() -> None:
                 bench_allocation_snapshot, bench_colocation, bench_elastic,
                 bench_scheduler_hillclimb, bench_roofline):
         t0 = time.time()
-        mod.run()
+        if mod is bench_colocation:
+            mod.run(num_nodes=args.nodes, horizon_hours=args.hours,
+                    seed=args.seed, write=not overridden,
+                    skip_scale=args.skip_scale)
+        else:
+            mod.run()
         print(f"# {mod.__name__} done in {time.time() - t0:.1f}s", flush=True)
 
 

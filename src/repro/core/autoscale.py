@@ -80,6 +80,22 @@ class Autoscaler:
         self.backfill = backfill
         self.backfill_chunk = backfill_chunk
         self.events: list[AutoscaleEvent] = []
+        # replica index: per-class uid -> Instance plus the achieved tier
+        # cached at bind time (a placement is immutable for the instance's
+        # lifetime, and ``restore`` re-inserts the original masks), kept
+        # current through the cluster's instance-op stream.  Turns
+        # ``replicas``/``online_reserve_gpus`` and the worst-tier
+        # scale-down sort from O(all instances) scans into O(class) work —
+        # at 10k nodes the cluster holds tens of thousands of offline
+        # instances that a per-policy scan would walk every tick.
+        self._by_class: dict[str, dict[int, Instance]] = {}
+        self._tier: dict[int, int] = {}
+        #: exact committed GPU count over all live instances (ints, so the
+        #: incremental sum equals a fresh scan bit-for-bit)
+        self.used_gpus = 0
+        for inst in cluster.instances.values():
+            self._index(+1, inst)
+        cluster.add_inst_listener(self._index)
         #: amortized per-request wall time of every ``plan_batch`` issued
         #: through this autoscaler — one entry per planned request, the
         #: SAME metric for host and fused engines (unlike the scheduler's
@@ -87,17 +103,39 @@ class Autoscaler:
         #: preemptive plans)
         self.plan_us: list[float] = []
 
-    def _timed_plan_batch(self, workloads, allow_preempt: bool = True):
+    def _timed_plan_batch(self, workloads, allow_preempt: bool = True,
+                          pad_to: int = 0):
+        reqs = list(workloads)
+        n = len(reqs)
+        if pad_to > n:
+            # fixed-width device dispatch: the padded tail is planned but
+            # NEVER committed — the batch plans sequentially against a
+            # shared view, so the first ``n`` decisions are unchanged
+            reqs.extend([reqs[-1]] * (pad_to - n))
         t0 = time.perf_counter()
-        txns = self.scheduler.plan_batch(workloads, allow_preempt=allow_preempt)
-        per_req = (time.perf_counter() - t0) * 1e6 / max(1, len(txns))
-        self.plan_us.extend([per_req] * len(txns))
-        return txns
+        txns = self.scheduler.plan_batch(reqs, allow_preempt=allow_preempt)
+        per_req = (time.perf_counter() - t0) * 1e6 / max(1, n)
+        self.plan_us.extend([per_req] * n)
+        return txns[:n]
+
+    def _index(self, delta: int, inst: Instance) -> None:
+        name = inst.workload.name
+        if delta > 0:
+            self._by_class.setdefault(name, {})[inst.uid] = inst
+            self._tier[inst.uid] = achieved_tier(self.cluster.spec,
+                                                 inst.gpu_mask)
+            self.used_gpus += inst.workload.gpus_per_instance
+        else:
+            cls = self._by_class.get(name)
+            if cls is not None:
+                cls.pop(inst.uid, None)
+            self._tier.pop(inst.uid, None)
+            self.used_gpus -= inst.workload.gpus_per_instance
 
     def replicas(self, name: str) -> list[Instance]:
         """Live replicas of one workload class, uid-ordered."""
-        return sorted((i for i in self.cluster.instances.values()
-                       if i.workload.name == name), key=lambda i: i.uid)
+        cls = self._by_class.get(name, {})
+        return [cls[uid] for uid in sorted(cls)]
 
     _replicas = replicas        # compat alias
 
@@ -112,7 +150,7 @@ class Autoscaler:
         total = 0
         for pol in self.policies:
             want = pol.desired(next_load)
-            have = len(self.replicas(pol.workload.name))
+            have = len(self._by_class.get(pol.workload.name, {}))
             total += max(0, want - have) * pol.workload.gpus_per_instance
         return total
 
@@ -125,28 +163,43 @@ class Autoscaler:
         preemptions = hits = failures = placements = 0
         reclaimed: dict[int, int] = {}
         if delta > 0:
-            # batched admission: plan the whole scale-up against one
-            # snapshot, then commit the feasible transactions in order
-            for txn in self._timed_plan_batch([policy.workload] * delta):
-                dec = txn.commit()
-                if dec.rejected:
-                    failures += 1
-                elif dec.preempted:
-                    preemptions += 1
-                    hits += int(dec.hit)
-                else:
-                    placements += 1
+            # batched admission in FIXED-width chunks: every preemptive
+            # device dispatch is ``backfill_chunk`` wide (final partial
+            # chunks pad, single-request remainders take the scalar plan
+            # path), so the vmapped batch session reuses ONE compiled
+            # program across every scale-up instead of jitting per
+            # distinct delta.  Decisions are bit-identical to one
+            # whole-delta batch: the batch plans sequentially against a
+            # shared view and chunks commit in order (the plan/commit
+            # interleave invariant, ``TopoScheduler.plan_batch``)
+            chunk = self.backfill_chunk
+            done = 0
+            while done < delta:
+                n = min(chunk, delta - done)
+                pad = chunk if 1 < n < chunk else 0
+                for txn in self._timed_plan_batch([policy.workload] * n,
+                                                  pad_to=pad):
+                    dec = txn.commit()
+                    if dec.rejected:
+                        failures += 1
+                    elif dec.preempted:
+                        preemptions += 1
+                        hits += int(dec.hit)
+                    else:
+                        placements += 1
+                done += n
             action = "scale_up"
         elif delta < 0:
             # release the worst-achieved-tier replicas first (cross-socket,
             # then same-socket, then NUMA-local; uid-deterministic within a
-            # tier) so down-ramps reclaim badly-distributed capacity
-            spec = self.cluster.spec
-            victims = sorted(
-                current,
-                key=lambda i: (-achieved_tier(spec, i.gpu_mask), i.uid))
+            # tier) so down-ramps reclaim badly-distributed capacity; tiers
+            # come from the bind-time cache, so the sort is O(class) instead
+            # of recomputing masks across the whole fleet
+            tiers = self._tier
+            victims = sorted(current,
+                             key=lambda i: (-tiers[i.uid], i.uid))
             for inst in victims[:-delta]:
-                tier = achieved_tier(spec, inst.gpu_mask)
+                tier = tiers[inst.uid]
                 reclaimed[tier] = reclaimed.get(tier, 0) + 1
                 self.cluster.evict(inst.uid)
             action = "scale_down"

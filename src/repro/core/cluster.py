@@ -67,6 +67,12 @@ class Cluster:
         # sourcing mirror can replay dirty rows vectorized instead of
         # re-encoding each one from the instance lists (`encode_row`)
         self._op_listeners: list[Callable[[tuple], None]] = []
+        # instance fan-out: the same bind/evict/restore stream with the
+        # WHOLE Instance attached (workload identity included, which the
+        # mask-level op tuple deliberately omits) — what the O(delta)
+        # simulation layer maintains its aggregate rate accumulators,
+        # replica indexes, and free-count feasibility gates from
+        self._inst_listeners: list[Callable[[int, "Instance"], None]] = []
         self._sourcing_ctx: "SourcingContext | None" = None
         self._device_state: "DeviceClusterState | None" = None
 
@@ -80,6 +86,7 @@ class Cluster:
         self.instances[inst.uid] = inst
         self._by_node[node].add(inst.uid)
         self._emit_op(node, +1, inst)
+        self._emit_inst(+1, inst)
         self.invalidate_node(node)
         return inst
 
@@ -88,6 +95,7 @@ class Cluster:
         self.topos[inst.node].release(inst.name)
         self._by_node[inst.node].discard(uid)
         self._emit_op(inst.node, -1, inst)
+        self._emit_inst(-1, inst)
         self.invalidate_node(inst.node)
         return inst
 
@@ -106,6 +114,7 @@ class Cluster:
         self.instances[inst.uid] = inst
         self._by_node[inst.node].add(inst.uid)
         self._emit_op(inst.node, +1, inst)
+        self._emit_inst(+1, inst)
         self.invalidate_node(inst.node)
         return inst
 
@@ -126,6 +135,17 @@ class Cluster:
                   inst.uid, inst.preemptible)
             for fn in self._op_listeners:
                 fn(op)
+
+    def _emit_inst(self, delta: int, inst: Instance) -> None:
+        for fn in self._inst_listeners:
+            fn(delta, inst)
+
+    def add_inst_listener(self, fn: Callable[[int, Instance], None]) -> None:
+        """Subscribe to ``(±1, Instance)`` for every bind/evict/restore —
+        the workload-aware sibling of `add_op_listener`.  A rollback's
+        ``restore`` emits ``+1`` with the ORIGINAL instance (same uid and
+        masks), so a consumer's ±1 bookkeeping is exactly reversible."""
+        self._inst_listeners.append(fn)
 
     def add_op_listener(self, fn: Callable[[tuple], None]) -> None:
         """Subscribe to the exact mutation stream behind ``invalidate_node``:

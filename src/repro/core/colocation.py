@@ -60,6 +60,21 @@ are credited separately as completed GPU-hours (goodput).
 ``compare_day_cycle`` runs the A/B: the same seeded day (identical arrival
 stream, identical policies) under a topology-aware engine and a
 topology-unaware baseline, reporting the scheduled-performance uplift.
+
+**The O(delta) host loop.**  Per-event host work is independent of cluster
+size: progress accrues through an aggregate piecewise-constant rate
+accumulator (`_RateAcc` — maintained on every instance bind/evict/restore
+via the cluster's inst-listener stream, materialized in a fixed summation
+order so it is BIT-exact vs a full per-event scan), same-instant
+requeue/submit waves coalesce into one chunked dispatch, backfill
+dispatches are skipped by an exact count-feasibility gate when no pending
+chunk job can place, and ramp/demotion/scale-down selection reads
+maintained per-node and per-tier indexes instead of re-sorting the fleet
+(`Autoscaler._index`, ``_offline_by_node``, free-count buckets).
+``ColocationConfig.legacy_loop=True`` runs the pre-O(delta) loop — the
+scale bench measures events/sec and bit-exact day-metric parity between
+the two (`BENCH_colocation.json` ``scale`` block, sizes 24..10240 on
+``engine="auto"``).
 """
 from __future__ import annotations
 
@@ -127,6 +142,12 @@ class ColocationConfig:
     #: don't support shortlisting ignore them); ``shortlist_k=0`` disables
     shortlist_k: int = 128
     shortlist_mode: str = "guaranteed"
+    #: True runs the pre-O(delta) host loop: a full instance scan per event
+    #: in ``_advance``, one ``_drain`` dispatch per requeue/submit event
+    #: (no same-timestamp coalescing), and no count-gated dispatch skip.
+    #: Decisions and metrics are bit-exact either way — this is the A/B
+    #: baseline the scale bench measures events/sec and parity against.
+    legacy_loop: bool = False
 
 
 @dataclasses.dataclass
@@ -185,6 +206,10 @@ class HourRow:
     #: plan/plan_batch call the sim issues — the same metric for host and
     #: fused engines
     plan_p50_us: float
+    #: XLA backend compiles that landed inside this interval
+    #: (`simulator.CompileWatch`): a nonzero count means the interval's
+    #: plan latencies paid cold-jit time, so the CI latency gate skips it
+    compiled_n: int = 0
     # ---- request-level elastic co-location (two-level ladder) ----
     elastic_admitted: int = 0       # offline jobs packed into request slots
     elastic_ejected: int = 0        # request-level ejections (degrade path)
@@ -198,9 +223,11 @@ class HourRow:
     slo: dict = dataclasses.field(default_factory=dict)
 
     def key_metrics(self) -> dict:
-        """Deterministic fields only (wall-clock latency excluded)."""
+        """Deterministic fields only (wall-clock latency and the
+        machine-dependent compile tag excluded)."""
         out = dataclasses.asdict(self)
         out.pop("plan_p50_us")
+        out.pop("compiled_n")
         return out
 
 
@@ -213,28 +240,62 @@ class ColocationReport:
     num_nodes: int
     horizon_hours: float
     hours: list[HourRow] = dataclasses.field(default_factory=list)
+    # fold-forward aggregate cache: day-total properties read from here
+    # instead of rescanning every hour row on each access (`compare_*`
+    # calls them repeatedly, and a 10k-node day has 24+ rows x ~20
+    # properties).  Rows are append-only and never mutated after `_flush`,
+    # so folding only the NEW rows — left to right, starting from 0 —
+    # reproduces a fresh ``sum()`` over all rows bit-for-bit.
+    _agg: dict = dataclasses.field(default_factory=dict, repr=False,
+                                   compare=False)
+    _agg_n: int = dataclasses.field(default=0, repr=False, compare=False)
+    _km: dict | None = dataclasses.field(default=None, repr=False,
+                                         compare=False)
+    _km_n: int = dataclasses.field(default=-1, repr=False, compare=False)
+
+    _SUM_FIELDS = ("scheduled_perf", "preemptor_perf", "offline_goodput",
+                   "preemptions", "hits", "placements", "failures",
+                   "requeued", "requeue_replanned", "completed_jobs",
+                   "elastic_admitted", "elastic_ejected",
+                   "elastic_completed", "elastic_demoted",
+                   "elastic_goodput")
+
+    def _fold(self) -> dict:
+        agg = self._agg
+        if not agg:
+            agg.update({k: 0 for k in self._SUM_FIELDS},
+                       slo_ok=0, slo_total=0, slo_violations=0)
+        for row in self.hours[self._agg_n:]:
+            for k in self._SUM_FIELDS:
+                agg[k] += getattr(row, k)
+            for c in row.slo.values():
+                agg["slo_ok"] += c["ok"]
+                agg["slo_total"] += c["total"]
+                agg["slo_violations"] += c["violations"]
+        self._agg_n = len(self.hours)
+        return agg
 
     @property
     def scheduled_perf(self) -> float:
-        return sum(r.scheduled_perf for r in self.hours)
+        return self._fold()["scheduled_perf"]
 
     @property
     def preemptor_perf(self) -> float:
         """Scheduled performance of preemption-placed instances only — the
         slice of the integral the paper's +55% claim is about."""
-        return sum(r.preemptor_perf for r in self.hours)
+        return self._fold()["preemptor_perf"]
 
     @property
     def offline_goodput(self) -> float:
-        return sum(r.offline_goodput for r in self.hours)
+        return self._fold()["offline_goodput"]
 
     @property
     def preemptions(self) -> int:
-        return sum(r.preemptions for r in self.hours)
+        return self._fold()["preemptions"]
 
     @property
     def hits(self) -> int:
-        return sum(r.hits for r in self.hours)
+        return self._fold()["hits"]
 
     @property
     def hit_rate(self) -> float:
@@ -242,56 +303,59 @@ class ColocationReport:
 
     @property
     def placements(self) -> int:
-        return sum(r.placements for r in self.hours)
+        return self._fold()["placements"]
 
     @property
     def failures(self) -> int:
-        return sum(r.failures for r in self.hours)
+        return self._fold()["failures"]
 
     @property
     def requeued(self) -> int:
-        return sum(r.requeued for r in self.hours)
+        return self._fold()["requeued"]
 
     @property
     def requeue_replanned(self) -> int:
-        return sum(r.requeue_replanned for r in self.hours)
+        return self._fold()["requeue_replanned"]
 
     @property
     def requeue_success_rate(self) -> float:
         return self.requeue_replanned / self.requeued if self.requeued else 0.0
 
     @property
+    def completed_jobs(self) -> int:
+        return self._fold()["completed_jobs"]
+
+    @property
     def elastic_admitted(self) -> int:
-        return sum(r.elastic_admitted for r in self.hours)
+        return self._fold()["elastic_admitted"]
 
     @property
     def elastic_ejected(self) -> int:
-        return sum(r.elastic_ejected for r in self.hours)
+        return self._fold()["elastic_ejected"]
 
     @property
     def elastic_completed(self) -> int:
-        return sum(r.elastic_completed for r in self.hours)
+        return self._fold()["elastic_completed"]
 
     @property
     def elastic_demoted(self) -> int:
-        return sum(r.elastic_demoted for r in self.hours)
+        return self._fold()["elastic_demoted"]
 
     @property
     def elastic_goodput(self) -> float:
-        return sum(r.elastic_goodput for r in self.hours)
+        return self._fold()["elastic_goodput"]
 
     @property
     def slo_violations(self) -> int:
-        return sum(c["violations"] for r in self.hours for c in r.slo.values())
+        return self._fold()["slo_violations"]
 
     @property
     def slo_attainment(self) -> float:
         """Fraction of online SLO window samples (all monitored classes)
         that met their TTFT/TPOT targets over the day; 1.0 when the run had
         no SLO monitor."""
-        ok = sum(c["ok"] for r in self.hours for c in r.slo.values())
-        total = sum(c["total"] for r in self.hours for c in r.slo.values())
-        return ok / total if total else 1.0
+        agg = self._fold()
+        return agg["slo_ok"] / agg["slo_total"] if agg["slo_total"] else 1.0
 
     def slo_by_class(self) -> dict[str, dict]:
         """Whole-day goodput-vs-SLO rows per monitored class."""
@@ -314,8 +378,13 @@ class ColocationReport:
 
     def key_metrics(self) -> dict:
         """Everything deterministic under (seed, engine) — the parity and
-        determinism tests compare these dicts whole."""
-        return {
+        determinism tests compare these dicts whole.  Cached per row count
+        (callers like ``compare_*`` and the regression gate call it
+        repeatedly); treat the returned dict as read-only."""
+        if self._km is not None and self._km_n == len(self.hours):
+            return self._km
+        self._km_n = len(self.hours)
+        self._km = {
             "engine": self.engine,
             "seed": self.seed,
             "num_nodes": self.num_nodes,
@@ -327,7 +396,7 @@ class ColocationReport:
             "failures": self.failures,
             "requeued": self.requeued,
             "requeue_replanned": self.requeue_replanned,
-            "completed_jobs": sum(r.completed_jobs for r in self.hours),
+            "completed_jobs": self.completed_jobs,
             "elastic_admitted": self.elastic_admitted,
             "elastic_ejected": self.elastic_ejected,
             "elastic_completed": self.elastic_completed,
@@ -337,6 +406,7 @@ class ColocationReport:
             "slo_attainment": self.slo_attainment,
             "hours": [r.key_metrics() for r in self.hours],
         }
+        return self._km
 
 
 def default_policies(cfg: ColocationConfig) -> list[AutoscalePolicy]:
@@ -352,6 +422,62 @@ def default_policies(cfg: ColocationConfig) -> list[AutoscalePolicy]:
         AutoscalePolicy(wl["A"], max(1, round(a_max * 0.25)), a_max),
         AutoscalePolicy(wl["B"], max(1, round(b_max * 0.25)), b_max),
     ]
+
+
+class _RateAcc:
+    """Aggregate Fig. 2 progress-rate accumulator (piecewise-constant).
+
+    One ``{contribution value -> live instance count}`` counter per
+    workload class (value = GPUs x relative scheduled factor, so only a
+    handful of distinct values exist per class) plus one counter for the
+    preemptor slice.  A class rate materializes as ``sum(value * count)``
+    in ascending value order — and because TIER_PERF holds non-dyadic
+    rationals, THAT fixed summation order is what makes a counter
+    maintained incrementally (the O(delta) loop) and a counter rebuilt by
+    a full instance scan (the legacy loop) produce bit-identical floats:
+    equal multisets sum identically.  ``_advance`` then accrues
+    ``rate * dt`` per class instead of walking every live instance.
+    """
+
+    __slots__ = ("counts", "pre", "_rates", "_pre_rate")
+
+    def __init__(self) -> None:
+        self.counts: dict[str, dict[float, int]] = {}
+        self.pre: dict[float, int] = {}
+        self._rates: dict[str, float] | None = None
+        self._pre_rate: float | None = None
+
+    def add(self, name: str, value: float, delta: int) -> None:
+        cnt = self.counts.setdefault(name, {})
+        n = cnt.get(value, 0) + delta
+        if n:
+            cnt[value] = n
+        else:
+            del cnt[value]
+            if not cnt:
+                del self.counts[name]
+        self._rates = None
+
+    def add_pre(self, value: float, delta: int) -> None:
+        n = self.pre.get(value, 0) + delta
+        if n:
+            self.pre[value] = n
+        else:
+            del self.pre[value]
+        self._pre_rate = None
+
+    @staticmethod
+    def _materialize(counter: dict[float, int]) -> float:
+        return sum(v * n for v, n in sorted(counter.items()))
+
+    def rates(self) -> tuple[dict[str, float], float]:
+        """(per-class rate, preemptor-slice rate), cached until mutated."""
+        if self._rates is None:
+            self._rates = {name: self._materialize(cnt)
+                           for name, cnt in self.counts.items()}
+        if self._pre_rate is None:
+            self._pre_rate = self._materialize(self.pre)
+        return self._rates, self._pre_rate
 
 
 class ColocationSim:
@@ -426,6 +552,39 @@ class ColocationSim:
         self._reset_acc()
         self._patch_base = self.fleet.store.patch_count
         self._plan_log_base = 0     # index into the autoscaler's plan_us log
+        # per-hour compile tagging: rows record how many XLA backend
+        # compiles landed inside their interval, so the latency gate can
+        # exclude compile-polluted hours (simulator.CompileWatch; the lazy
+        # import dodges the simulator <-> colocation module cycle)
+        from .simulator import CompileWatch
+        self._watch = CompileWatch.get()
+        self._compile_mark = self._watch.mark()
+        self._kind_cache: dict[str, str] = {}   # workload name -> kind
+        self.events_processed = 0
+        #: job-tracked offline instances per node (mirrors ``_running``) —
+        #: `_demote_for_block` reads it instead of re-sorting the whole
+        #: running set on every ramp
+        self._offline_by_node: dict[int, set[int]] = {}
+        # ---- O(delta) loop state (unused when cfg.legacy_loop) ----
+        # aggregate progress rates + per-node free-GPU/CoreGroup counts +
+        # the (gpus, coregroups) -> feasible-node-count gate, all kept
+        # current through the cluster's instance-op stream; dead online
+        # uids feed the O(changed) pool reconcile
+        self._rates = _RateAcc()
+        self._free_gpu = [0] * self.cluster.num_nodes
+        self._free_cg = [0] * self.cluster.num_nodes
+        self._feas: dict[tuple[int, int], int] = {}
+        self._dead_online: set[int] = set()
+        if not cfg.legacy_loop:
+            for n in range(self.cluster.num_nodes):
+                fg, fc = self.cluster.free_masks(n)
+                self._free_gpu[n] = fg.bit_count()
+                self._free_cg[n] = fc.bit_count()
+            for inst in self.cluster.instances.values():
+                self._rates.add(inst.workload.name,
+                                inst.workload.gpus_per_instance
+                                * self._instance_factor(inst), +1)
+            self.cluster.add_inst_listener(self._on_inst)
 
         if policies:
             t = 0.0
@@ -440,9 +599,28 @@ class ColocationSim:
                                       step=0))
 
     # ---- event plumbing --------------------------------------------------------------
+    @staticmethod
+    def _sort_key(kind: int, payload):
+        """Canonical tie-break WITHIN one (timestamp, kind) group: job
+        events order by jid, completions by uid — intrinsic identities, so
+        the day is invariant to the ORDER same-timestamp events were
+        enqueued in (a requeue wave enqueues in victim order, which is an
+        engine artifact).  Ticks and explicit scale events keep insertion
+        order via the seq element.  Keys are only ever compared within one
+        kind, so the per-kind types never mix."""
+        if kind in (_REQUEUE, _SUBMIT):
+            return payload.jid
+        if kind == _COMPLETE:
+            return payload          # instance uid
+        if kind == _ECOMPLETE:
+            return payload          # (jid, generation)
+        return 0
+
     def _push(self, time: float, kind: int, payload) -> None:
         self._seq += 1
-        heapq.heappush(self._heap, (time, kind, self._seq, payload))
+        heapq.heappush(self._heap, (time, kind,
+                                    self._sort_key(kind, payload),
+                                    self._seq, payload))
 
     def _generate_offline_arrivals(self) -> None:
         """Draw the WHOLE offline arrival stream (times, classes, durations)
@@ -505,19 +683,76 @@ class ColocationSim:
             self._factor_cache[inst.uid] = factor
         return factor
 
+    def _on_inst(self, delta: int, inst) -> None:
+        """Cluster instance-op stream (bind/evict/restore, transactional or
+        not): keep the aggregate rates, the per-node free counts, and the
+        count-feasibility gate current in O(1) per mutation."""
+        value = (inst.workload.gpus_per_instance
+                 * self._instance_factor(inst))
+        self._rates.add(inst.workload.name, value, delta)
+        if inst.uid in self._preemptor_uids:
+            self._rates.add_pre(value, delta)
+        node = inst.node
+        old_g, old_c = self._free_gpu[node], self._free_cg[node]
+        new_g = old_g - delta * inst.gpu_mask.bit_count()
+        new_c = old_c - delta * inst.cg_mask.bit_count()
+        self._free_gpu[node], self._free_cg[node] = new_g, new_c
+        for (ng, nc), cnt in self._feas.items():
+            was = old_g >= ng and old_c >= nc
+            now = new_g >= ng and new_c >= nc
+            if was != now:
+                self._feas[(ng, nc)] = cnt + (1 if now else -1)
+        if self.pool is not None and inst.workload.kind == "online":
+            if delta < 0:
+                self._dead_online.add(inst.uid)
+            else:
+                self._dead_online.discard(inst.uid)
+
+    def _count_feasible(self, workload: WorkloadSpec) -> bool:
+        """Does ANY node have enough free GPU/CoreGroup *bits* for this
+        workload?  Exactly the normal scheduling cycle's reject condition:
+        `TopoScheduler._place_on` falls back to count-based blind placement
+        (kubelet degraded admission) on every engine, host and fused alike,
+        so count-infeasible everywhere <=> the plan would reject — which
+        lets `_drain` skip whole dispatches against a saturated cluster."""
+        need = (workload.gpus_per_instance,
+                workload.coregroups_per_instance(
+                    self.cluster.spec.coregroup_size))
+        cnt = self._feas.get(need)
+        if cnt is None:             # first query: seed from current counts
+            ng, nc = need
+            cnt = sum(1 for n in range(self.cluster.num_nodes)
+                      if self._free_gpu[n] >= ng and self._free_cg[n] >= nc)
+            self._feas[need] = cnt
+        return cnt > 0
+
     def _advance(self, to_time: float) -> None:
         """Accumulate the factor-weighted GPU-hour integrals up to
-        ``to_time`` (cluster state is piecewise-constant between events)."""
+        ``to_time`` (cluster state is piecewise-constant between events).
+
+        Both loops accrue ``rate * dt`` per class from a `_RateAcc`; the
+        O(delta) loop reads the incrementally-maintained one, the legacy
+        loop rebuilds an identical counter by scanning every live instance
+        — the multisets are equal, so the floats are too (bit-exact parity
+        by construction)."""
         dt = to_time - self._now
         if dt > 0:
+            if self.cfg.legacy_loop:
+                acc = _RateAcc()
+                for inst in self.cluster.instances.values():
+                    value = (inst.workload.gpus_per_instance
+                             * self._instance_factor(inst))
+                    acc.add(inst.workload.name, value, +1)
+                    if inst.uid in self._preemptor_uids:
+                        acc.add_pre(value, +1)
+                rates, pre_rate = acc.rates()
+            else:
+                rates, pre_rate = self._rates.rates()
             served = self._acc["served"]
-            for inst in self.cluster.instances.values():
-                name = inst.workload.name
-                contrib = (inst.workload.gpus_per_instance
-                           * self._instance_factor(inst) * dt)
-                served[name] = served.get(name, 0.0) + contrib
-                if inst.uid in self._preemptor_uids:
-                    self._acc["preemptor_perf"] += contrib
+            for name, rate in rates.items():
+                served[name] = served.get(name, 0.0) + rate * dt
+            if pre_rate:
+                self._acc["preemptor_perf"] += pre_rate * dt
         self._now = to_time
 
     def _on_decision(self, dec, event: str) -> None:
@@ -531,7 +766,15 @@ class ColocationSim:
             acc["preemptions"] += 1
             acc["hits"] += int(dec.hit)
             if dec.instance is not None:
-                self._preemptor_uids.add(dec.instance.uid)
+                inst = dec.instance
+                self._preemptor_uids.add(inst.uid)
+                if not self.cfg.legacy_loop:
+                    # the bind op fired BEFORE this listener (commit order:
+                    # evict victims, bind, then decision listeners), so the
+                    # class rate already counts this instance — only the
+                    # preemptor slice starts here, where the uid is marked
+                    self._rates.add_pre(inst.workload.gpus_per_instance
+                                        * self._instance_factor(inst), +1)
         else:
             acc["placements"] += 1
         if (self.pool is not None and dec.instance is not None
@@ -544,6 +787,7 @@ class ColocationSim:
             job = self._running.pop(victim.uid, None)
             if job is None:
                 continue        # not job-tracked (e.g. pre-saturated state)
+            self._drop_offline_index(victim.node, victim.uid)
             ran = (self._now - job.started_at) * job.rate
             job.remaining_hours = max(self.cfg.min_requeue_hours,
                                       job.remaining_hours - ran)
@@ -582,6 +826,7 @@ class ColocationSim:
             decision_factor_mean=(statistics.fmean(acc["factors"])
                                   if acc["factors"] else 0.0),
             plan_p50_us=(statistics.median(log) if log else 0.0),
+            compiled_n=self._watch.delta(self._compile_mark),
             elastic_admitted=acc["elastic_admitted"],
             elastic_ejected=acc["elastic_ejected"],
             elastic_completed=acc["elastic_completed"],
@@ -593,9 +838,17 @@ class ColocationSim:
         self._row_start = end
         self._patch_base = self.fleet.store.patch_count
         self._plan_log_base = len(self.auto.plan_us)
+        self._compile_mark = self._watch.mark()
         self._reset_acc()
 
     def _kind_of(self, name: str) -> str:
+        kind = self._kind_cache.get(name)
+        if kind is None:            # memo: a class's kind never changes,
+            kind = self._kind_of_uncached(name)     # and the fallback walks
+            self._kind_cache[name] = kind           # every job ever created
+        return kind
+
+    def _kind_of_uncached(self, name: str) -> str:
         for w in self.auto.policies:
             if w.workload.name == name:
                 return w.workload.kind
@@ -646,12 +899,20 @@ class ColocationSim:
         self.pending.append(job)
         self._drain()
 
+    def _drop_offline_index(self, node: int, uid: int) -> None:
+        uids = self._offline_by_node.get(node)
+        if uids is not None:
+            uids.discard(uid)
+            if not uids:
+                del self._offline_by_node[node]
+
     def _handle_complete(self, uid: int) -> None:
         job = self._running.get(uid)
         if job is None or job.uid != uid:
             return               # stale event: the job was preempted earlier
         del self._running[uid]
-        self.cluster.evict(uid)
+        inst = self.cluster.evict(uid)
+        self._drop_offline_index(inst.node, uid)
         job.uid = None
         job.remaining_hours = 0.0
         job.completed_at = self._now
@@ -699,18 +960,47 @@ class ColocationSim:
             if not chunk:
                 self.pending.extend(queue)
                 return
-            txns = self.auto._timed_plan_batch([j.workload for j in chunk],
-                                               allow_preempt=False)
             any_placed = False
-            for job, txn in zip(chunk, txns):
-                if txn.decision.placed:
-                    dec = txn.commit()
-                    self._start_job(job, dec)
-                    any_placed = True
-                else:
-                    self.pending.append(job)
-                    if budget is not None:
-                        budget += job.workload.gpus_per_instance
+            if self.cfg.legacy_loop:
+                txns = self.auto._timed_plan_batch(
+                    [j.workload for j in chunk], allow_preempt=False)
+                for job, txn in zip(chunk, txns):
+                    if txn.decision.placed:
+                        dec = txn.commit()
+                        self._start_job(job, dec)
+                        any_placed = True
+                    else:
+                        self.pending.append(job)
+                        if budget is not None:
+                            budget += job.workload.gpus_per_instance
+            else:
+                # count-gated per-job dispatch.  Normal-cycle placement
+                # succeeds iff some node has enough free GPUs AND
+                # coregroups (``_place_on`` always falls back to
+                # ``place_blind``; the fused engines carry the same
+                # degraded blind branch), so a job that fails the count
+                # check would reject without mutating state — skip its
+                # plan entirely.  Feasible jobs plan singly and commit
+                # immediately; the inst-listener refreshes the free-count
+                # index between jobs, which keeps the gate exact AND the
+                # decisions bit-identical to the legacy shared-view batch
+                # (the plan/commit interleave invariant,
+                # ``TopoScheduler.plan_batch``).
+                for job in chunk:
+                    if not self._count_feasible(job.workload):
+                        self.pending.append(job)
+                        if budget is not None:
+                            budget += job.workload.gpus_per_instance
+                        continue
+                    txn = self.auto._timed_plan_batch(
+                        [job.workload], allow_preempt=False)[0]
+                    if txn.decision.placed:
+                        self._start_job(job, txn.commit())
+                        any_placed = True
+                    else:        # count gate is exact; defensive only
+                        self.pending.append(job)
+                        if budget is not None:
+                            budget += job.workload.gpus_per_instance
             if not any_placed:
                 self.pending.extend(queue)
                 return
@@ -725,6 +1015,7 @@ class ColocationSim:
         # instance runs slower and holds its GPUs proportionally longer
         job.rate = self._instance_factor(dec.instance)
         self._running[uid] = job
+        self._offline_by_node.setdefault(dec.instance.node, set()).add(uid)
         if job.awaiting_replan:
             job.awaiting_replan = False
             self._acc["requeue_replanned"] += 1
@@ -810,24 +1101,52 @@ class ColocationSim:
         keep running at request granularity) until one node frees a block.
         Demotion stops the moment the pool cannot absorb a job — then the
         scale executor preempts exactly as before."""
-        free = [self.cluster.free_masks(n)[0].bit_count()
-                for n in range(self.cluster.num_nodes)]
+        legacy = self.cfg.legacy_loop
+        if legacy:
+            free = [self.cluster.free_masks(n)[0].bit_count()
+                    for n in range(self.cluster.num_nodes)]
+
+            def take(gpn: int) -> int | None:
+                # best-fit against the simulated free map: the tightest
+                # node that already fits this replica absorbs it
+                return min((n for n in range(len(free)) if free[n] >= gpn),
+                           key=lambda n: (free[n], n), default=None)
+        else:
+            # listener-maintained free counts + lazy free-count buckets:
+            # each bucket is a min-heap of node ids whose free count MAY be
+            # that value (stale entries are popped on contact), so best-fit
+            # is O(num_gpus + log N) per replica instead of an O(N) scan —
+            # the heap head of the smallest feasible bucket is exactly the
+            # legacy ``min((free[n], n))`` choice
+            free = list(self._free_gpu)
+            ngpu = self.cluster.spec.num_gpus
+            buckets: list[list[int]] = [[] for _ in range(ngpu + 1)]
+            for node, cnt in enumerate(free):
+                if cnt > 0:
+                    buckets[cnt].append(node)   # ascending ids: valid heaps
+
+            def take(gpn: int) -> int | None:
+                for cnt in range(gpn, ngpu + 1):
+                    b = buckets[cnt]
+                    while b and free[b[0]] != cnt:
+                        heapq.heappop(b)        # stale since push
+                    if b:
+                        return heapq.heappop(b)
+                return None
+
         for pol in self.auto.policies:
             have = len(self.auto.replicas(pol.workload.name))
             need_n = pol.desired(self._last_load) - have
             gpn = pol.workload.gpus_per_instance
             for _ in range(max(0, need_n)):
-                # best-fit against the simulated free map: the tightest
-                # node that already fits this replica absorbs it
-                fit = min((n for n in range(len(free)) if free[n] >= gpn),
-                          key=lambda n: (free[n], n), default=None)
-                if fit is not None:
-                    free[fit] -= gpn
-                    continue
-                fit = self._demote_for_block(gpn, free)
+                fit = take(gpn)
                 if fit is None:
-                    return      # pool saturated: fall back to preemption
+                    fit = self._demote_for_block(gpn, free)
+                    if fit is None:
+                        return  # pool saturated: fall back to preemption
                 free[fit] -= gpn
+                if not legacy and free[fit] > 0:
+                    heapq.heappush(buckets[free[fit]], fit)
 
     def _demote_for_block(self, need: int, free: list[int]) -> int | None:
         """Assemble one ``need``-GPU block by demoting offline instances on
@@ -835,13 +1154,22 @@ class ColocationSim:
         block with the fewest demotions (tie: lowest node index), demoting
         largest instances first.  Returns the node, or None if no node can
         reach the block or the pool rejects a job mid-assembly."""
-        by_node: dict[int, list] = {}
-        for uid in sorted(self._running):
-            inst = self.cluster.instances.get(uid)
-            if inst is not None:
-                by_node.setdefault(inst.node, []).append(inst)
+        if self.cfg.legacy_loop:
+            by_node: dict[int, list] = {}
+            for uid in sorted(self._running):
+                inst = self.cluster.instances.get(uid)
+                if inst is not None:
+                    by_node.setdefault(inst.node, []).append(inst)
+            items = sorted(by_node.items())
+        else:
+            # per-node offline-instance index maintained at every
+            # start/complete/preempt/demote — same node order and same
+            # uid-sorted candidate lists as the legacy full-_running scan
+            items = [(n, [self.cluster.instances[u]
+                          for u in sorted(self._offline_by_node[n])])
+                     for n in sorted(self._offline_by_node)]
         best = None             # (demotions, node, victims)
-        for n, insts in sorted(by_node.items()):
+        for n, insts in items:
             insts = sorted(insts, key=lambda i: (
                 -i.workload.gpus_per_instance, i.uid))
             got, take = free[n], []
@@ -875,6 +1203,7 @@ class ColocationSim:
             return False
         del self._running[inst.uid]
         self.cluster.evict(inst.uid)
+        self._drop_offline_index(inst.node, inst.uid)
         ran = (self._now - job.started_at) * job.rate
         job.remaining_hours = max(self.cfg.min_requeue_hours,
                                   job.remaining_hours - ran)
@@ -887,9 +1216,19 @@ class ColocationSim:
     def _reconcile_pool(self) -> None:
         """Scale-downs and completions evict online replicas WITHOUT a
         transaction; drop their ReplicaSlots and eject hosted requests."""
-        live = {uid for uid, inst in self.cluster.instances.items()
-                if inst.workload.kind == "online"}
-        for uid in sorted(set(self.pool.replicas) - live):
+        if self.cfg.legacy_loop:
+            live = {uid for uid, inst in self.cluster.instances.items()
+                    if inst.workload.kind == "online"}
+            dead = sorted(set(self.pool.replicas) - live)
+        else:
+            # O(changed): the inst-listener records every evicted online
+            # uid; uids are never reused and replicas register only at
+            # commit of live instances, so the intersection with the
+            # registered set IS the legacy full-scan difference.
+            dead = sorted(u for u in self._dead_online
+                          if u in self.pool.replicas)
+            self._dead_online.clear()
+        for uid in dead:
             for jid in self.pool.unregister(uid):
                 self._eject_elastic(jid)
 
@@ -898,8 +1237,11 @@ class ColocationSim:
         tick's scale-up will claim (`Autoscaler.online_reserve_gpus`), so
         ramps place online replicas in the normal cycle instead of
         preempting offline instances spun up one tick earlier."""
-        used = sum(i.workload.gpus_per_instance
-                   for i in self.cluster.instances.values())
+        if self.cfg.legacy_loop:
+            used = sum(i.workload.gpus_per_instance
+                       for i in self.cluster.instances.values())
+        else:
+            used = self.auto.used_gpus     # listener-maintained exact count
         free = self.cluster.spec.num_gpus * self.cluster.num_nodes - used
         return max(0, free - self.auto.online_reserve_gpus(self._next_load))
 
@@ -917,9 +1259,29 @@ class ColocationSim:
             _SCALE: lambda t, p: self._handle_scale(p),
             _ECOMPLETE: lambda t, p: self._handle_ecomplete(p),
         }
-        while self._heap and self._heap[0][0] <= horizon:
-            t, kind, _, payload = heapq.heappop(self._heap)
+        heap = self._heap
+        coalesce = not self.cfg.legacy_loop
+        while heap and heap[0][0] <= horizon:
+            t, kind, _, _, payload = heapq.heappop(heap)
             self._advance(t)
+            self.events_processed += 1
+            if (coalesce and kind in (_REQUEUE, _SUBMIT) and heap
+                    and heap[0][0] == t and heap[0][1] == kind):
+                # coalesce a same-instant wave (a preemption burst's
+                # requeues, a submit cluster) into ONE drain: the sort_key
+                # heap element fixes the pop order to jid order, identical
+                # to the per-event appends, and deferring `_drain` to the
+                # end of the wave plans the whole queue through chunked
+                # ``plan_batch`` calls instead of one dispatch per event
+                batch = [payload]
+                while heap and heap[0][0] == t and heap[0][1] == kind:
+                    batch.append(heapq.heappop(heap)[4])
+                    self.events_processed += 1
+                if kind == _SUBMIT:
+                    self.jobs.extend(batch)
+                self.pending.extend(batch)
+                self._drain()
+                continue
             handlers[kind](t, payload)
         self._advance(horizon)
         self._flush(horizon)

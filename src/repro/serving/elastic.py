@@ -230,6 +230,7 @@ class ReplicaSlots:
         self.kv_budget = (cache_capacity(_KVShape(cfg.swa_window), cfg.seq_len)
                          * self.total_slots)
         self.online_slots = 0
+        self._synced_load: float | None = None
         self.jobs: dict[int, int] = {}       # jid -> granted slots
 
     @property
@@ -240,8 +241,17 @@ class ReplicaSlots:
         return self.offline_slots / self.total_slots if self.total_slots else 0.0
 
     def set_load(self, load: float) -> None:
+        self._synced_load = load
         self.online_slots = min(self.total_slots,
                                 math.ceil(self.total_slots * load))
+
+    def sync_load(self, load: float) -> None:
+        """Lazily apply the pool's current load.  ``online_slots`` is a
+        pure function of (total_slots, load), so a replica untouched since
+        the last load change recomputes it on first access instead of the
+        pool eagerly updating every replica per tick."""
+        if self._synced_load != load:
+            self.set_load(load)
 
     def kv_headroom_slots(self) -> int:
         """Offline slot grants the remaining KV budget can still hold."""
@@ -314,14 +324,18 @@ class ElasticPool:
 
     # ---- load / SLO reclaim (degrade-before-kill, step 1) ---------------------------
     def set_load(self, load: float) -> list[int]:
-        """Online traffic reclaims its slots: raise every replica's online
-        share and eject offline grants that no longer fit under the slot /
-        KV / SLO bounds.  Returns ejected jids (deterministic order)."""
+        """Online traffic reclaims its slots: record the new load (every
+        replica picks it up lazily via ``sync_load`` on next access) and
+        eject offline grants that no longer fit under the slot / KV / SLO
+        bounds.  Only replicas actually HOSTING grants are walked — a
+        replica without jobs has nothing to eject, so the reclaim pass is
+        O(changed replicas), not O(fleet).  Returns ejected jids in the
+        same deterministic order the full scan produced."""
         self.load = load
         ejected: list[int] = []
-        for uid in sorted(self.replicas):
+        for uid in sorted(set(self._host.values())):
             rs = self.replicas[uid]
-            rs.set_load(load)
+            rs.sync_load(load)
             allowed = self.monitor.allowed_share(uid, rs.tier_factor, load)
             while rs.overflow_slots(allowed) > 0 and rs.jobs:
                 jid = max(rs.jobs)           # youngest grant first
@@ -342,6 +356,7 @@ class ElasticPool:
         best_spare = 0
         for uid in sorted(self.replicas):
             rs = self.replicas[uid]
+            rs.sync_load(self.load)
             spare = rs.spare_slots(
                 self.monitor.allowed_share(uid, rs.tier_factor, self.load))
             if spare > best_spare:
@@ -367,6 +382,8 @@ class ElasticPool:
         return len(self._host)
 
     def spare_total(self) -> int:
+        for rs in self.replicas.values():
+            rs.sync_load(self.load)
         return sum(
             rs.spare_slots(self.monitor.allowed_share(uid, rs.tier_factor,
                                                       self.load))
